@@ -1,0 +1,39 @@
+"""Paper Fig. 11: batch updates (ADD_EDGES) vs single updates vs rebuild.
+
+Sweeps the number of edges updated at once and reports the crossover
+against Build_Bisim, as in §5.5.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BisimMaintainer, build_bisim
+from repro.graph.storage import Graph
+
+from .datasets import suite
+
+
+def run(scale: int = 1, k: int = 10):
+    rows = []
+    for name, g in list(suite(scale).items())[:2]:
+        rng = np.random.default_rng(1)
+        for nedges in (1, 10, 100, 1000):
+            idx = rng.choice(g.num_edges, size=nedges, replace=False)
+            keep = np.ones(g.num_edges, bool)
+            keep[idx] = False
+            gg = Graph(g.node_labels, g.src[keep], g.dst[keep],
+                       g.elabel[keep])
+            m = BisimMaintainer(gg, k)
+            t0 = time.perf_counter()
+            rep = m.add_edges(g.src[idx], g.elabel[idx], g.dst[idx])
+            dt = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            build_bisim(g, k)
+            dt_build = time.perf_counter() - t0
+            rows.append((
+                f"batch_updates/{name}/edges={nedges}", dt * 1e6,
+                f"rebuild_us={dt_build * 1e6:.0f};"
+                f"update_wins={dt < dt_build};rebuilt={rep.rebuilt}"))
+    return rows

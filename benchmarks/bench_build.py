@@ -1,0 +1,30 @@
+"""Paper Fig. 3 / Table 7: Build_Bisim per-iteration behavior (k=10).
+
+Columns mirror Table 7: partition count, constructing time, bytes
+sorted/scanned (the STXXL I/O analogue), per dataset per iteration.
+"""
+from __future__ import annotations
+
+from repro.core import build_bisim
+
+from .datasets import suite
+
+
+def run(scale: int = 1, k: int = 10):
+    rows = []
+    for name, g in suite(scale).items():
+        res = build_bisim(g, k, mode="sorted", early_stop=True)
+        for st in res.stats:
+            rows.append((
+                f"build/{name}/iter{st.iteration}",
+                st.seconds * 1e6,
+                f"partitions={st.num_partitions};"
+                f"bytes_sorted={st.bytes_sorted};"
+                f"bytes_scanned={st.bytes_scanned};"
+                f"nodes={g.num_nodes};edges={g.num_edges}"))
+        rows.append((
+            f"build/{name}/total", sum(s.seconds for s in res.stats) * 1e6,
+            f"converged_at={res.converged_at};"
+            f"final_partitions={res.counts[-1]};"
+            f"partition_ratio={res.counts[-1] / g.num_nodes:.4f}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Figs. 9-10: Dbest / Dworst adversarial maintenance cases.
+
+Dbest (full k-ary tree, insert into a leaf): no signature changes, update
+beats rebuild. Dworst (complete graph, one new y-labeled edge): every node
+invalidated every level, rebuild wins (heuristic switches back).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import BisimMaintainer, build_bisim
+from repro.graph import generators as gen
+
+
+def run(k: int = 10):
+    rows = []
+    # Dbest: 4-ary tree height 8 -> ~87k nodes
+    dbest = gen.kary_tree(4, 8)
+    m = BisimMaintainer(dbest, k)
+    leaf = dbest.num_nodes - 1
+    t0 = time.perf_counter()
+    rep = m.add_edge(leaf - 1, 0, leaf)
+    dt_upd = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    build_bisim(m.graph, k)
+    dt_build = time.perf_counter() - t0
+    rows.append((
+        "extremes/dbest/add_edge", dt_upd * 1e6,
+        f"changed={sum(rep.nodes_changed)};rebuild_us={dt_build * 1e6:.0f};"
+        f"speedup={dt_build / dt_upd:.2f}x"))
+
+    # Dworst: complete graph 300 nodes (~90k edges)
+    dworst = gen.complete_graph(300)
+    m = BisimMaintainer(dworst, k, rebuild_threshold=2.0)  # force no switch
+    t0 = time.perf_counter()
+    rep = m.add_edge(0, 1, 5)
+    dt_upd = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    build_bisim(m.graph, k)
+    dt_build = time.perf_counter() - t0
+    rows.append((
+        "extremes/dworst/add_edge", dt_upd * 1e6,
+        f"checked={sum(rep.nodes_checked)};rebuild_us={dt_build * 1e6:.0f};"
+        f"update_vs_rebuild={dt_upd / dt_build:.2f}x"))
+    # with the §4.2 heuristic enabled the maintainer switches to rebuild
+    m2 = BisimMaintainer(gen.complete_graph(300), k, rebuild_threshold=0.5)
+    t0 = time.perf_counter()
+    rep2 = m2.add_edge(0, 1, 5)
+    dt_heur = time.perf_counter() - t0
+    rows.append((
+        "extremes/dworst/add_edge_with_heuristic", dt_heur * 1e6,
+        f"rebuilt={rep2.rebuilt}"))
+    return rows

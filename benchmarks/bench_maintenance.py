@@ -1,0 +1,47 @@
+"""Paper Figs. 7-8: ADD_EDGE behavior and comparison with Build_Bisim.
+
+As in §5.4: pick a random existing edge, build the partition on the rest,
+apply ADD_EDGE, and compare with recomputing from scratch.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BisimMaintainer, build_bisim
+from repro.graph.storage import Graph
+
+from .datasets import suite
+
+
+def run(scale: int = 1, k: int = 10, trials: int = 3):
+    rows = []
+    for name, g in list(suite(scale).items())[:4]:
+        rng = np.random.default_rng(0)
+        upd_times, build_times = [], []
+        checked = changed = 0
+        for t in range(trials):
+            i = int(rng.integers(0, g.num_edges))
+            keep = np.ones(g.num_edges, bool)
+            keep[i] = False
+            gg = Graph(g.node_labels, g.src[keep], g.dst[keep],
+                       g.elabel[keep])
+            m = BisimMaintainer(gg, k)
+            t0 = time.perf_counter()
+            rep = m.add_edge(int(g.src[i]), int(g.elabel[i]),
+                             int(g.dst[i]))
+            upd_times.append(time.perf_counter() - t0)
+            checked += sum(rep.nodes_checked)
+            changed += sum(rep.nodes_changed)
+            t0 = time.perf_counter()
+            build_bisim(g, k)
+            build_times.append(time.perf_counter() - t0)
+        rows.append((
+            f"maintenance/{name}/add_edge",
+            float(np.mean(upd_times)) * 1e6,
+            f"nodes_checked={checked / trials:.1f};"
+            f"nodes_changed={changed / trials:.1f};"
+            f"rebuild_us={np.mean(build_times) * 1e6:.0f};"
+            f"speedup={np.mean(build_times) / np.mean(upd_times):.2f}x"))
+    return rows

@@ -1,0 +1,28 @@
+"""Scaled-down analogues of the paper's dataset suite (Table 6).
+
+The originals (Jamendo .. Twitter, 1M-1.4B edges) are not redistributable
+offline; each family is reproduced by a generator with the same *shape*:
+edge-labeled RDF-ish randomness, page-link power-law (WikiLinks), heavy-hub
+power-law (Twitter), and highly structured synthetic RDF (SP2B/BSBM).
+Scale is set for CPU benchmarking; pass scale>1 to grow linearly.
+"""
+from __future__ import annotations
+
+from repro.graph import generators as gen
+
+
+def suite(scale: int = 1):
+    s = scale
+    return {
+        # name: (graph, description)
+        "jamendo-like": gen.random_graph(5_000 * s, 11_000 * s, 4, 8,
+                                         seed=1),
+        "linkedmdb-like": gen.random_graph(23_000 * s, 61_000 * s, 6, 12,
+                                           seed=2),
+        "wikilinks-like": gen.powerlaw_graph(30_000 * s, 130_000 * s, 1, 1,
+                                             alpha=1.1, seed=3),
+        "twitter-like": gen.powerlaw_graph(20_000 * s, 200_000 * s, 1, 1,
+                                           alpha=0.9, seed=4),
+        "sp2b-like": gen.structured_graph(15_000 * s, seed=5),
+        "bsbm-like": gen.structured_graph(8_000 * s, seed=6),
+    }

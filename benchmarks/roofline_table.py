@@ -1,0 +1,48 @@
+"""Render the EXPERIMENTS.md roofline table from runs/dryrun* JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def fmt(x, digits=4):
+    return f"{x:.{digits}f}" if isinstance(x, (int, float)) else "-"
+
+
+def rows_from(dirname: str):
+    rows = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        d = json.load(open(f))
+        if d.get("skipped"):
+            rows.append((d["arch"], d["shape"],
+                         "multi" if d["multi_pod"] else "single",
+                         "SKIP", d["skipped"]))
+            continue
+        rf = d["roofline"]
+        peak = d["memory"].get("peak_estimate_bytes", 0) / 2 ** 30
+        rows.append((
+            d["arch"], d["shape"], "multi" if d["multi_pod"] else "single",
+            peak, rf["compute_s"], rf["memory_s"], rf["collective_s"],
+            rf["dominant"], d.get("useful_flops_ratio"),
+            d.get("roofline_fraction")))
+    return rows
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun_final"
+    print("| arch | shape | mesh | GiB/dev | compute s | memory s | "
+          "collective s | dominant | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows_from(dirname):
+        if r[3] == "SKIP":
+            print(f"| {r[0]} | {r[1]} | {r[2]} | skip | — | — | — | — | — "
+                  f"| — |")
+            continue
+        print(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]:.1f} | {fmt(r[4])} "
+              f"| {fmt(r[5])} | {fmt(r[6])} | {r[7]} | {fmt(r[8], 3)} "
+              f"| {fmt(r[9], 4)} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure (see DESIGN §6).
+
+Prints ``name,us_per_call,derived`` CSV. ``--scale N`` grows the datasets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_batch_updates, bench_block_sweep, bench_build,
+                        bench_extremes, bench_maintenance, bench_scaling,
+                        bench_sig_store)
+
+ALL = [
+    ("fig3_table7_build", bench_build.run, True),
+    ("fig4_sig_store", bench_sig_store.run, True),
+    ("fig5_block_sweep", bench_block_sweep.run, True),
+    ("fig6_scaling", bench_scaling.run, False),
+    ("fig7_8_maintenance", bench_maintenance.run, True),
+    ("fig9_10_extremes", bench_extremes.run, False),
+    ("fig11_batch_updates", bench_batch_updates.run, True),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    ap.add_argument("--scale", type=int, default=1)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t_start = time.perf_counter()
+    for name, fn, scalable in ALL:
+        if args.only and args.only not in name:
+            continue
+        rows = fn(scale=args.scale) if scalable else fn()
+        for rname, us, derived in rows:
+            print(f"{name}/{rname},{us:.1f},{derived}")
+    print(f"# total benchmark wall time: "
+          f"{time.perf_counter() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

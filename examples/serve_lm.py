@@ -1,0 +1,55 @@
+"""End-to-end serving driver: batched requests through the ServeEngine
+(wave-based continuous batching, KV-cache decode, greedy sampling).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 24 --max-new 32
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.model import Model  # noqa: E402
+from repro.serve import ServeEngine  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_9b",
+                    help="any assigned arch (reduced config)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).scaled(
+        d_model=256, num_heads=8, num_kv_heads=4, head_dim=32, d_ff=768,
+        vocab_size=4096, vocab_pad_multiple=128)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    print(f"serving {cfg.name}-reduced: {model.num_params() / 1e6:.1f}M "
+          f"params, max_batch={args.max_batch}")
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(1, cfg.vocab_size,
+                             rng.integers(4, 48)).tolist()
+                for _ in range(args.requests)]
+
+    eng = ServeEngine(model, params, max_batch=args.max_batch, max_seq=128)
+    t0 = time.perf_counter()
+    outs = eng.serve(requests, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    print(f"served {len(outs)} requests in {dt:.2f}s "
+          f"({eng.stats.generated_tokens / dt:.1f} tok/s); "
+          f"waves={eng.stats.waves} decode_steps={eng.stats.decode_steps}")
+    for i, o in enumerate(outs[:3]):
+        print(f"  req{i}: prompt_len={len(requests[i])} -> {o[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro — pod-scale k-bisimulation partitioning of big graphs, plus the
+distributed JAX runtime (mesh/sharding, trainer, serving, checkpointing)
+and the assigned 10-architecture LM zoo.
+
+Paper: "External memory (k-)bisimulation reduction of big graphs"
+(Luo, Fletcher, Hidders, Wu, De Bra, 2012). See DESIGN.md.
+
+Subpackages:
+  core        the paper's algorithms (construction, maintenance, oracle)
+  graph       graph storage + dataset-family generators
+  kernels     Pallas TPU kernels (+ pure-jnp oracles)
+  models      architecture zoo (pure JAX)
+  configs     assigned architecture configs (full + smoke)
+  optim       AdamW, schedules, int8 EF gradient compression
+  data        deterministic per-host data pipeline
+  checkpoint  atomic keep-k checkpointing (elastic by construction)
+  train       fault-tolerant trainer + straggler monitor
+  serve       batched serving engine
+  launch      mesh/sharding rules, dry-run, roofline, CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .manager import CheckpointManager
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "llama4_scout_17b_16e",
+    "deepseek_v2_lite_16b",
+    "zamba2_7b",
+    "mamba2_780m",
+    "phi4_mini_3p8b",
+    "minicpm3_4b",
+    "qwen1p5_110b",
+    "gemma2_9b",
+    "llava_next_34b",
+    "seamless_m4t_large_v2",
+]
+
+# CLI names (dashes) -> module names
+ALIASES = {a.replace("_", "-").replace("p", "."): a for a in ARCH_IDS}
+
+
+def get_config(arch: str):
+    name = arch.replace("-", "_").replace(".", "p")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{name}").CONFIG
+
+
+def get_smoke_config(arch: str):
+    name = arch.replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{name}").SMOKE_CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

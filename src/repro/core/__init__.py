@@ -1,0 +1,23 @@
+"""The paper's primary contribution: I/O-efficient (here: SIMD/pod-native)
+k-bisimulation partition construction and maintenance for massive graphs.
+
+Public API:
+  build_bisim              — Algorithm 1 on one device (3 signature modes)
+  build_bisim_distributed  — Algorithm 1 over a device mesh (shard_map)
+  BisimMaintainer          — Algorithms 2-4 (+ deletions, change-k)
+  oracle_pids              — exact Definition-1 oracle for validation
+"""
+from .partition import (BisimResult, IterationStats, build_bisim,
+                        partition_blocks, refines, same_partition)
+from .distributed import (ShardedGraph, build_bisim_distributed,
+                          make_flat_mesh, shard_graph)
+from .maintenance import BisimMaintainer, MaintenanceReport
+from .oracle import is_k_bisimilar, oracle_pids
+from . import signatures
+
+__all__ = [
+    "BisimResult", "IterationStats", "build_bisim", "partition_blocks",
+    "refines", "same_partition", "ShardedGraph", "build_bisim_distributed",
+    "make_flat_mesh", "shard_graph", "BisimMaintainer", "MaintenanceReport",
+    "is_k_bisimilar", "oracle_pids", "signatures",
+]

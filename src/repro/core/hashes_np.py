@@ -1,0 +1,79 @@
+"""Bit-exact numpy replicas of the JAX hash primitives in signatures.py.
+
+The maintenance algorithms (paper §4) recompute signatures for *sparse
+frontiers* of nodes on the host; those signatures must hash identically to
+the ones the bulk JAX engine stored in S during construction. A dedicated
+test asserts jnp/np agreement on random inputs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_C1 = np.uint32(0x9E3779B1)
+_C2 = np.uint32(0x85EBCA77)
+_C3 = np.uint32(0xC2B2AE3D)
+_C4 = np.uint32(0x27D4EB2F)
+_C5 = np.uint32(0x165667B1)
+_SEED_LO = np.uint32(0x2545F491)
+_SEED_HI = np.uint32(0x9E3779B9)
+
+
+def fmix32(h):
+    with np.errstate(over="ignore"):
+        h = np.asarray(h, dtype=np.uint32)
+        h = h ^ (h >> np.uint32(16))
+        h = h * np.uint32(0x85EBCA6B)
+        h = h ^ (h >> np.uint32(13))
+        h = h * np.uint32(0xC2B2AE35)
+        h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def hash_pair(a, b):
+    with np.errstate(over="ignore"):
+        a = np.asarray(a).astype(np.uint32)
+        b = np.asarray(b).astype(np.uint32)
+        lo = fmix32(a * _C1 + b * _C2 + _SEED_LO)
+        hi = fmix32(a * _C3 + b * _C4 + _SEED_HI)
+        return fmix32(hi + lo * _C5), lo
+
+
+def hash_triple(a, b, c):
+    with np.errstate(over="ignore"):
+        c = np.asarray(c).astype(np.uint32)
+        h1, l1 = hash_pair(a, b)
+        return hash_pair(h1 + c * _C5, l1 ^ c)
+
+
+def node_signature(pid0_u: int, elabels: np.ndarray, pid_tgts: np.ndarray,
+                   *, dedup: bool = True):
+    """sig_j hash pair for one node given its out-edge (eLabel, pid) pairs."""
+    e_hi, e_lo = hash_pair(elabels, pid_tgts)
+    if dedup and e_hi.size:
+        key = (np.asarray(elabels).astype(np.int64) << np.int64(32)) | \
+            np.asarray(pid_tgts).astype(np.int64)
+        _, first = np.unique(key, return_index=True)
+        e_hi, e_lo = e_hi[first], e_lo[first]
+    seg_hi = np.uint32(e_hi.sum(dtype=np.uint64) & np.uint64(0xFFFFFFFF))
+    seg_lo = np.uint32(e_lo.sum(dtype=np.uint64) & np.uint64(0xFFFFFFFF))
+    hi, lo = hash_triple(seg_hi, seg_lo, np.uint32(pid0_u))
+    return int(hi), int(lo)
+
+
+def node_signatures_batch(pid0: np.ndarray, offsets: np.ndarray,
+                          elabel: np.ndarray, pid_tgt: np.ndarray,
+                          nodes: np.ndarray, *, dedup: bool = True):
+    """Signatures for a batch of nodes (CSR out-edge layout).
+
+    offsets: CSR row offsets [N+1] over edge arrays sorted by src.
+    elabel/pid_tgt: per-edge columns in CSR order.
+    nodes: node ids to compute signatures for.
+    Returns (hi[int64 n], lo[int64 n]) as python-int-safe arrays.
+    """
+    his = np.empty(nodes.shape[0], dtype=np.uint32)
+    los = np.empty(nodes.shape[0], dtype=np.uint32)
+    for i, u in enumerate(nodes.tolist()):
+        s, e = offsets[u], offsets[u + 1]
+        h, l = node_signature(pid0[u], elabel[s:e], pid_tgt[s:e], dedup=dedup)
+        his[i], los[i] = h, l
+    return his, los

@@ -1,0 +1,239 @@
+"""Maintenance of an existing k-bisimulation partition (paper §4, Alg. 2-4).
+
+State mirrors the paper's maintenance setup: the node table keeps the full
+pid history pId_0..pId_k (Table 3), both edge sort orders are available
+(CSR by src = E_tst, CSR by dst = E_tts), and the signature store S built
+during construction is kept and updated.
+
+The STXXL priority queue of (iteration, nId) pairs becomes a per-level
+frontier set: dequeueing "all pairs with the smallest j" (line 11, Alg. 4)
+is exactly processing frontier[j] level by level; "propagate changes to
+pQueue" (line 20) becomes frontier[j+1] |= parents(changed).
+
+The paper's §4.2 heuristic — switch back to Build_Bisim when most nodes end
+up in the queue — is the `rebuild_threshold` knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.graph.storage import Graph
+from . import hashes_np
+from .partition import BisimResult, build_bisim
+
+
+@dataclasses.dataclass
+class MaintenanceReport:
+    """Per-update statistics (the quantities of paper Figs. 7-8)."""
+    nodes_checked: list          # per level j=1..k
+    nodes_changed: list          # per level
+    partitions_touched: list     # per level
+    rebuilt: bool = False
+
+
+class BisimMaintainer:
+    """Holds a graph + its k-bisimulation partition and applies updates."""
+
+    def __init__(self, graph: Graph, k: int, *, mode: str = "sorted",
+                 rebuild_threshold: float = 0.5,
+                 result: Optional[BisimResult] = None):
+        if mode not in ("sorted", "dedup_hash"):
+            # multiset (counting) maintenance would need multiset stores;
+            # the paper's semantics is the set one, so we maintain that.
+            raise ValueError("maintenance supports set-semantics modes only")
+        self.k = k
+        self.mode = mode
+        self.rebuild_threshold = rebuild_threshold
+        self.graph = graph
+        self._build(result)
+
+    # ------------------------------------------------------------------
+    def _build(self, result: Optional[BisimResult] = None) -> None:
+        res = result if result is not None else build_bisim(
+            self.graph, self.k, mode=self.mode, early_stop=False,
+            with_store=True)
+        if res.stores is None:
+            raise ValueError("BisimMaintainer needs with_store=True results")
+        # pid history as mutable int64 (new pids can exceed int32 eventually)
+        self.pids = [np.array(res.pids[j], dtype=np.int64)
+                     for j in range(self.k + 1)]
+        self.stores = res.stores          # [0]: label->pid, [j]: (hi,lo)->pid
+        self.next_pid = list(res.next_pid)
+        self._refresh_indexes()
+
+    def _refresh_indexes(self) -> None:
+        self.out_off = self.graph.out_offsets()
+        self.in_ord = self.graph.in_order()
+        self.in_off = self.graph.in_offsets()
+
+    # ------------------------------------------------------------ queries
+    def pid(self, j: Optional[int] = None) -> np.ndarray:
+        return self.pids[self.k if j is None else j]
+
+    def result(self) -> BisimResult:
+        return BisimResult(
+            pids=np.stack([p.astype(np.int64) for p in self.pids]),
+            counts=[len(np.unique(p)) for p in self.pids], stats=[],
+            converged_at=None, k_requested=self.k)
+
+    # ------------------------------------------------------- ADD_NODE(S)
+    def add_node(self, label: int) -> int:
+        """Algorithm 2: add one isolated node."""
+        return self.add_nodes([label])[0]
+
+    def add_nodes(self, labels: Iterable[int]) -> list:
+        """Algorithm 3: bulk insert isolated nodes (merge-join on labels)."""
+        labels = list(labels)
+        new_ids = list(range(self.graph.num_nodes,
+                             self.graph.num_nodes + len(labels)))
+        self.graph = self.graph.with_nodes_added(np.array(labels, np.int32))
+        for j in range(self.k + 1):
+            self.pids[j] = np.concatenate(
+                [self.pids[j], np.zeros(len(labels), dtype=np.int64)])
+        for nid, lab in zip(new_ids, labels):
+            if lab in self.stores[0]:
+                p0 = self.stores[0][lab]
+            else:
+                p0 = self.next_pid[0]
+                self.next_pid[0] += 1
+                self.stores[0][lab] = p0
+            self.pids[0][nid] = p0
+            # sig_j of an isolated node is (pId_0, {}) for every j >= 1
+            for j in range(1, self.k + 1):
+                key = hashes_np.node_signature(
+                    p0, np.empty(0, np.int32), np.empty(0, np.int32))
+                if key in self.stores[j]:
+                    pj = self.stores[j][key]
+                else:
+                    pj = self.next_pid[j]
+                    self.next_pid[j] += 1
+                    self.stores[j][key] = pj
+                self.pids[j][nid] = pj
+        self._refresh_indexes()
+        return new_ids
+
+    # ------------------------------------------------------- ADD_EDGE(S)
+    def add_edges(self, src, elabel, dst) -> MaintenanceReport:
+        """Algorithm 4 (and its ADD_EDGES batch variant)."""
+        src = np.atleast_1d(np.asarray(src, dtype=np.int32))
+        dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
+        elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
+        self.graph = self.graph.with_edges_added(src, dst, elabel)
+        self._refresh_indexes()
+        return self._propagate(frontier0=np.unique(src))
+
+    def add_edge(self, s: int, l: int, t: int) -> MaintenanceReport:
+        return self.add_edges([s], [l], [t])
+
+    def delete_edges(self, src, elabel, dst) -> MaintenanceReport:
+        """Deletions (§4): same propagation pattern as insertion."""
+        src = np.atleast_1d(np.asarray(src, dtype=np.int32))
+        dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
+        elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
+        self.graph = self.graph.with_edges_removed(src, dst, elabel)
+        self._refresh_indexes()
+        return self._propagate(frontier0=np.unique(src))
+
+    def delete_node(self, nid: int) -> MaintenanceReport:
+        """Remove a node: first its incident edges, then the node row."""
+        g = self.graph
+        out_mask = g.src == nid
+        in_mask = g.dst == nid
+        rep = self.delete_edges(g.src[out_mask | in_mask],
+                                g.elabel[out_mask | in_mask],
+                                g.dst[out_mask | in_mask])
+        # The paper then drops the N_t row; we keep a tombstone (isolated
+        # node) to preserve the dense id space of the column tables.
+        return rep
+
+    # ------------------------------------------------------- propagation
+    def _propagate(self, frontier0: np.ndarray) -> MaintenanceReport:
+        n = self.graph.num_nodes
+        report = MaintenanceReport([], [], [])
+        pid0 = self.pids[0]
+        frontier = np.unique(frontier0)
+        always = np.unique(frontier0)  # (j, s) enqueued for every j (line 7-8)
+        for j in range(1, self.k + 1):
+            if frontier.size == 0:
+                report.nodes_checked.append(0)
+                report.nodes_changed.append(0)
+                report.partitions_touched.append(0)
+                continue
+            if frontier.size > self.rebuild_threshold * n:
+                # §4.2 heuristic: most nodes queued -> full rebuild is cheaper
+                self._build()
+                report.rebuilt = True
+                return report
+            pid_prev = self.pids[j - 1]
+            pid_tgt = pid_prev[self.graph.dst]
+            hi, lo = hashes_np.node_signatures_batch(
+                pid0, self.out_off, self.graph.elabel, pid_tgt, frontier)
+            changed = []
+            store = self.stores[j]
+            for u, h, l in zip(frontier.tolist(), hi.tolist(), lo.tolist()):
+                key = (h, l)
+                if key in store:
+                    pj = store[key]
+                else:
+                    pj = self.next_pid[j]
+                    self.next_pid[j] += 1
+                    store[key] = pj
+                if self.pids[j][u] != pj:
+                    changed.append((u, self.pids[j][u], pj))
+                    self.pids[j][u] = pj
+            report.nodes_checked.append(int(frontier.size))
+            report.nodes_changed.append(len(changed))
+            report.partitions_touched.append(
+                len({old for (_, old, _) in changed}
+                    | {new for (_, _, new) in changed}))
+            # propagate to parents of changed nodes (line 20; uses E_tts)
+            if changed and j < self.k:
+                ch = np.array([u for (u, _, _) in changed], dtype=np.int64)
+                parents = []
+                for u in ch.tolist():
+                    s, e = self.in_off[u], self.in_off[u + 1]
+                    parents.append(self.graph.src[self.in_ord[s:e]])
+                parents = (np.unique(np.concatenate(parents))
+                           if parents else np.empty(0, np.int64))
+                frontier = np.union1d(parents, always)
+            else:
+                frontier = always.copy()
+        return report
+
+    # ---------------------------------------------------------- change k
+    def change_k(self, new_k: int) -> None:
+        """§4 'Change k': decrease slices history; increase runs extra
+        iterations of Algorithm 1 on top of the stored state."""
+        if new_k <= self.k:
+            self.pids = self.pids[: new_k + 1]
+            self.stores = self.stores[: new_k + 1]
+            self.next_pid = self.next_pid[: new_k + 1]
+            self.k = new_k
+            return
+        # run additional iterations bottom-up from the stored pId_k
+        from . import signatures as sig
+        import jax.numpy as jnp
+        pid0 = jnp.asarray(self.pids[0].astype(np.int32))
+        src = jnp.asarray(self.graph.src)
+        dst = jnp.asarray(self.graph.dst)
+        elab = jnp.asarray(self.graph.elabel)
+        pid_prev = jnp.asarray(self.pids[self.k].astype(np.int32))
+        for j in range(self.k + 1, new_k + 1):
+            hi, lo = sig.signature_hashes(
+                pid0, src, dst, elab, pid_prev,
+                num_nodes=self.graph.num_nodes, mode=self.mode)
+            from .signatures import dense_rank_pairs
+            pid_new, count = dense_rank_pairs(hi, lo)
+            store = {}
+            for h, l, p in zip(np.asarray(hi).tolist(),
+                               np.asarray(lo).tolist(),
+                               np.asarray(pid_new).tolist()):
+                store[(h, l)] = p
+            self.stores.append(store)
+            self.next_pid.append(int(count))
+            self.pids.append(np.asarray(pid_new).astype(np.int64))
+            pid_prev = pid_new
+        self.k = new_k

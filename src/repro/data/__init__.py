@@ -1,0 +1,2 @@
+from .pipeline import PipelineConfig, TokenPipeline
+__all__ = ["PipelineConfig", "TokenPipeline"]

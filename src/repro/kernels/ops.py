@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels + host-side layout builders.
+
+Kernels are TPU-target (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True against the oracles in ref.py. The
+model/dry-run paths use XLA-native math by default (`interpret` kernels are
+not lowerable in the CPU dry-run); on real TPU hardware `use_kernel=True`
+switches the hot paths over.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sig_fold as _sig_fold
+from . import flash_attention as _flash
+
+# re-exports
+flash_attention = _flash.flash_attention
+sig_fold = _sig_fold.sig_fold
+
+
+@jax.jit
+def edge_hash(elabel: jax.Array, pid_tgt: jax.Array):
+    """Fused per-edge signature hash (jnp path; oracle = ref.edge_hash_ref).
+
+    Exists so repro.core can route hashing through the kernels package on
+    TPU; on CPU it is the same pure-jnp computation as the oracle.
+    """
+    from repro.core import signatures as sig
+    return sig.hash_pair(elabel, pid_tgt)
+
+
+def blocked_csr_layout(src: np.ndarray, dst: np.ndarray, elabel: np.ndarray,
+                       num_nodes: int, *, nodes_per_block: int = 8,
+                       edges_per_block_align: int = 128):
+    """Build the blocked-CSR layout sig_fold consumes.
+
+    Edges (sorted by src) are grouped by source node-block; every block is
+    padded to a common edge budget so the Pallas grid is rectangular.
+    Returns dict of padded arrays + meta. Skew cost: total padding is
+    (num_blocks * eb - E); heavy-hub graphs should use larger blocks.
+    """
+    nb = nodes_per_block
+    num_blocks = -(-num_nodes // nb)
+    blk_of_edge = src // nb
+    counts = np.bincount(blk_of_edge, minlength=num_blocks)
+    eb = max(int(counts.max()), 1)
+    eb = -(-eb // edges_per_block_align) * edges_per_block_align
+    e_lab = np.zeros((num_blocks, eb), dtype=np.int32)
+    e_dst = np.zeros((num_blocks, eb), dtype=np.int32)
+    e_lsrc = np.zeros((num_blocks, eb), dtype=np.int32)
+    e_valid = np.zeros((num_blocks, eb), dtype=bool)
+    starts = np.zeros(num_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for blk in range(num_blocks):
+        lo, hi = starts[blk], starts[blk + 1]
+        c = hi - lo
+        e_lab[blk, :c] = elabel[lo:hi]
+        e_dst[blk, :c] = dst[lo:hi]
+        e_lsrc[blk, :c] = src[lo:hi] - blk * nb
+        e_valid[blk, :c] = True
+    return dict(
+        elabel=e_lab.reshape(-1), dst=e_dst.reshape(-1),
+        local_src=e_lsrc.reshape(-1), valid=e_valid.reshape(-1),
+        nodes_per_block=nb, edges_per_block=eb, num_blocks=num_blocks,
+        padded_nodes=num_blocks * nb)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nodes_per_block", "edges_per_block", "num_nodes", "interpret"))
+def sig_fold_from_layout(elabel, dst, local_src, valid, pid_prev, *,
+                         nodes_per_block: int, edges_per_block: int,
+                         num_nodes: int, interpret: bool = True):
+    """Gather pid_prev[dst] then run the sig_fold kernel; trims padding."""
+    pid_tgt = pid_prev[dst]
+    hi, lo = _sig_fold.sig_fold(
+        elabel, pid_tgt, local_src, valid, nodes_per_block=nodes_per_block,
+        edges_per_block=edges_per_block, interpret=interpret)
+    return hi[:num_nodes], lo[:num_nodes]

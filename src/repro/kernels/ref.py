@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import signatures as sig
+
+
+def edge_hash_ref(elabel: jax.Array, pid_tgt: jax.Array):
+    """Oracle for kernels.edge_hash: per-edge 2x32-bit mix hash."""
+    return sig.hash_pair(elabel, pid_tgt)
+
+
+def sig_fold_ref(elabel, pid_tgt, src, valid, num_nodes: int):
+    """Oracle for kernels.sig_fold: masked per-edge hash + segment-sum.
+
+    elabel/pid_tgt/src: int32 [E]; valid: bool [E].
+    Returns (seg_hi, seg_lo) uint32 [num_nodes].
+    """
+    e_hi, e_lo = sig.hash_pair(elabel, pid_tgt)
+    e_hi = jnp.where(valid, e_hi, jnp.uint32(0))
+    e_lo = jnp.where(valid, e_lo, jnp.uint32(0))
+    seg = jnp.where(valid, src, 0)
+    seg_hi = jax.ops.segment_sum(e_hi, seg, num_segments=num_nodes)
+    seg_lo = jax.ops.segment_sum(e_lo, seg, num_segments=num_nodes)
+    return seg_hi, seg_lo
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    """Oracle for kernels.flash_attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Multi-host bring-up for real pods.
+
+Call `init_cluster()` first thing on every host; it wires
+jax.distributed from standard TPU/GKE or Slurm environment variables and
+returns (process_index, process_count). All launchers in this package are
+multi-host-safe: the data pipeline shards by process index, checkpointing
+writes from process 0 (single-controller state is replicated), and the
+production mesh spans all devices.
+
+Example Slurm step (2 pods x 64 hosts x 4 chips = 512 chips):
+
+    srun --nodes=128 --ntasks-per-node=1 \
+      python -m repro.launch.train --arch qwen1p5_110b --shape train_4k \
+         --production-mesh --multi-pod --ckpt-dir /shared/ckpt
+"""
+from __future__ import annotations
+
+import os
+
+
+def init_cluster(coordinator: str | None = None,
+                 num_processes: int | None = None,
+                 process_id: int | None = None):
+    """Initialize jax.distributed if a multi-host environment is detected.
+
+    Resolution order: explicit args > TPU metadata (jax autodetect) >
+    Slurm variables > single-process fallback.
+    """
+    import jax
+
+    if coordinator is None and "SLURM_JOB_NODELIST" in os.environ:
+        nodes = os.environ["SLURM_JOB_NODELIST"].split(",")[0]
+        coordinator = f"{nodes.split('[')[0]}:12345"
+        num_processes = int(os.environ.get("SLURM_NTASKS", "1"))
+        process_id = int(os.environ.get("SLURM_PROCID", "0"))
+
+    if coordinator is not None:
+        jax.distributed.initialize(
+            coordinator_address=coordinator,
+            num_processes=num_processes, process_id=process_id)
+    elif os.environ.get("TPU_WORKER_HOSTNAMES"):
+        jax.distributed.initialize()  # TPU autodetection
+
+    return jax.process_index(), jax.process_count()

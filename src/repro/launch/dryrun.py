@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). This module is CLI-only; tests use subprocesses.
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config               # noqa: E402
+from repro.launch import mesh as meshlib                     # noqa: E402
+from repro.launch import roofline                            # noqa: E402
+from repro.models.config import SHAPES, supports_shape       # noqa: E402
+from repro.models.model import Model, model_flops            # noqa: E402
+from repro.optim import OptConfig, init_opt_state            # noqa: E402
+from repro.train.trainer import make_train_step              # noqa: E402
+
+
+def _sharded_structs(shapes_tree, axes_tree, mesh, rules):
+    def f(ax, sh):
+        sharding = meshlib.sharding_for(ax, sh.shape, mesh, rules)
+        return jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=sharding)
+    return jax.tree.map(
+        f, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def _opt_structs(param_structs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                         sharding=s.sharding)
+    return {"m": jax.tree.map(f32, param_structs),
+            "v": jax.tree.map(f32, param_structs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rules_extra=None, remat=True):
+    """Lower + compile one (arch x shape x mesh) cell; return stats dict."""
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supports_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": "long_500k requires sub-quadratic attention "
+                           "(full-attention arch; see DESIGN.md)"}
+    model = Model(cfg)
+    rules = meshlib.rules_for_shape(shape_name)
+    if rules_extra:
+        rules.update(rules_extra)
+
+    pshapes = model.param_shapes(jnp.bfloat16)
+    paxes = model.param_axes()
+    params_s = _sharded_structs(pshapes, paxes, mesh, rules)
+    in_specs, in_axes = model.input_specs(shape, jnp.bfloat16)
+    batch_s = _sharded_structs(in_specs, in_axes, mesh, rules)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        step_fn = make_train_step(model, OptConfig(), mesh, rules)
+        opt_s = _opt_structs(params_s)
+        lowered = step_fn.lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            with meshlib.sharding_context(mesh, rules):
+                logits, cache = model.prefill(params, batch)
+                return logits[:, -1], cache
+        lowered = jax.jit(prefill_step).lower(params_s, batch_s)
+    else:  # decode
+        def serve_step(params, cache, token, index):
+            with meshlib.sharding_context(mesh, rules):
+                return model.decode_step(params, cache, token, index)
+        lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+            params_s, batch_s["cache"], batch_s["token"], batch_s["index"])
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    print(compiled.memory_analysis())   # proves it fits (per-device bytes)
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})  # FLOPs/bytes for §Roofline
+    mem = roofline.memory_summary(compiled)
+    rf = roofline.analyze(compiled, chips)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = rf.flops_per_device * chips
+    out = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": chips, "kind": shape.kind,
+        "num_params": model.num_params(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": rf.to_dict(),
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global
+        else None,
+        "roofline_fraction": rf.fraction_of_roofline(mf),
+    }
+    return out
+
+
+# ----------------------------------------------------------- paper cell
+def lower_bisim_cell(*, multi_pod: bool, mode: str = "sorted",
+                     ranking: str = "allgather", log2_nodes: int = 28,
+                     log2_edges: int = 31):
+    """Dry-run of the paper's distributed Build_Bisim iteration step."""
+    from repro.core import distributed as dist
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    axis = tuple(mesh.shape.keys())
+    chips = int(np.prod(list(mesh.shape.values())))
+    n = 2 ** log2_nodes
+    e = 2 ** log2_edges
+    n_loc = -(-(n + 1) // chips)
+    n_pad = n_loc * chips
+    e_loc = -(-e // chips)
+    cap = max(int(np.ceil(n_loc / chips * 2.0)), 8)
+    sh = NamedSharding(mesh, P(axis))
+    i32 = lambda size: jax.ShapeDtypeStruct((size,), jnp.int32, sharding=sh)
+    b1 = jax.ShapeDtypeStruct((e_loc * chips,), jnp.bool_, sharding=sh)
+
+    t0 = time.perf_counter()
+    lowered = dist._distributed_step.lower(
+        i32(n_pad), i32(n_pad), i32(e_loc * chips), i32(e_loc * chips),
+        i32(e_loc * chips), b1, mesh=mesh, axis=axis, n_loc=n_loc,
+        mode=mode, ranking=ranking, capacity=cap)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    print(compiled.memory_analysis())
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})
+    mem = roofline.memory_summary(compiled)
+    rf = roofline.analyze(compiled, chips)
+    return {
+        "arch": f"bisim[{mode},{ranking}]", "shape":
+            f"n=2^{log2_nodes},e=2^{log2_edges}", "multi_pod": multi_pod,
+        "chips": chips, "kind": "bisim_iteration",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "roofline": rf.to_dict(),
+        # one iteration's useful work ~ hashing+ranking every edge: treat
+        # bytes as the model cost; flops ratio is not meaningful here.
+        "model_flops_global": None, "hlo_flops_global":
+            rf.flops_per_device * chips, "useful_flops_ratio": None,
+        "roofline_fraction": None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} | all | bisim")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} | all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--bisim-mode", default="sorted")
+    ap.add_argument("--bisim-ranking", default="allgather")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [m.strip() for m in args.mesh.split(",")]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for mp_name in meshes:
+        multi_pod = mp_name == "multi"
+        for arch in archs:
+            if arch == "bisim":
+                tag = (f"bisim_{args.bisim_mode}_{args.bisim_ranking}"
+                       f"_{mp_name}")
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                try:
+                    res = lower_bisim_cell(multi_pod=multi_pod,
+                                           mode=args.bisim_mode,
+                                           ranking=args.bisim_ranking)
+                except Exception as ex:  # noqa: BLE001
+                    failures.append((tag, str(ex)))
+                    traceback.print_exc()
+                    continue
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                _report(res)
+                continue
+            for shape in shapes:
+                tag = f"{arch}_{shape}_{mp_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                try:
+                    res = lower_cell(arch, shape, multi_pod=multi_pod)
+                except Exception as ex:  # noqa: BLE001
+                    failures.append((tag, str(ex)))
+                    traceback.print_exc()
+                    continue
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                _report(res)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, ex in failures:
+            print(f"  {tag}: {ex[:300]}")
+        raise SystemExit(1)
+    print("\nDRY-RUN PASS")
+
+
+def _report(res: dict) -> None:
+    if res.get("skipped"):
+        print(f"[SKIP] {res['arch']} x {res['shape']} "
+              f"({'multi' if res['multi_pod'] else 'single'}): "
+              f"{res['skipped']}")
+        return
+    mem = res.get("memory", {})
+    rf = res.get("roofline", {})
+    peak_gb = mem.get("peak_estimate_bytes", 0) / 2**30
+    print(f"[OK] {res['arch']} x {res['shape']} "
+          f"({'multi' if res['multi_pod'] else 'single'}-pod, "
+          f"{res['chips']} chips) "
+          f"mem/dev={peak_gb:.2f}GiB "
+          f"compute={rf.get('compute_s', 0):.4f}s "
+          f"memory={rf.get('memory_s', 0):.4f}s "
+          f"coll={rf.get('collective_s', 0):.4f}s "
+          f"dom={rf.get('dominant')} "
+          f"lower={res['lower_s']}s compile={res['compile_s']}s")
+
+
+if __name__ == "__main__":
+    main()

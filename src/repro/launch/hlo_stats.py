@@ -1,0 +1,250 @@
+"""While-loop-aware HLO statistics.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE — under
+scan-over-layers that undercounts flops/bytes/collectives by the trip count
+(80x for an 80-layer stack). This module walks the post-optimization HLO
+text: it segments computations, builds a per-computation symbol table
+(operand shapes are not inline in HLO text), recurses through
+`while`/`call`/`fusion`/`conditional` ops with trip-count multipliers
+(parsed from the loop condition's comparison constant), and accumulates:
+
+  * flops            — 2 * prod(output dims) * prod(contracted lhs dims)
+                       for every dot/convolution (incl. inside fusions);
+  * hbm bytes        — operand + result bytes of every non-trivial
+                       top-level op (post-fusion HLO: fusion boundaries
+                       approximate HBM round trips);
+  * collective bytes — per kind, byte-maximal shape among operands/result
+                       (all-gather result / reduce-scatter operand ≈ ring
+                       wire bytes), 2x for all-reduce.
+
+All quantities are PER-DEVICE (the module is SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?\s*"
+    r"(pred|s4|u4|s8|u8|s16|u16|f16|bf16|f8e4m3fn|f8e5m2|s32|u32|f32|s64|"
+    r"u64|f64|c64|c128)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|"
+    r"c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_OPND_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+_TRIVIAL = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+            "bitcast(", "after-all(", "iota(", "partition-id(",
+            "copy-start(", "copy-done(")
+
+
+def _nbytes(dtype: str, dims) -> float:
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n * _DTYPE_BYTES.get(dtype, 4))
+
+
+@dataclasses.dataclass
+class _Comp:
+    lines: list
+    defs: dict  # var -> (dtype, dims tuple)
+
+
+def _split_computations(text: str) -> dict:
+    comps = {}
+    cur = None
+    for raw in text.splitlines():
+        stripped = raw.strip()
+        if not raw.startswith((" ", "\t")) and stripped.endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = _Comp([], {})
+                comps[m.group(1)] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and stripped:
+            cur.lines.append(stripped)
+            dm = _DEF_RE.match(stripped)
+            if dm:
+                dims = tuple(int(x) for x in dm.group(3).split(",") if x)
+                cur.defs[dm.group(1)] = (dm.group(2), dims)
+    return comps
+
+
+def _entry_name(text: str):
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def _operands(line: str) -> list:
+    """Names of %operands in the op's argument list."""
+    try:
+        args = line.split("(", 1)[1]
+    except IndexError:
+        return []
+    out = []
+    depth = 1
+    token = ""
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    for part in token.split(","):
+        part = part.strip()
+        m = re.match(r"^(?:[\w\[\]\{\},:\s/*=]*)?%([\w\.\-]+)$", part)
+        if m:
+            out.append(m.group(1))
+        else:
+            m2 = re.search(r"%([\w\.\-]+)\s*$", part)
+            if m2:
+                out.append(m2.group(1))
+    return out
+
+
+def _trip_count(cond: "_Comp") -> int:
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_MULT})
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLL_MULT})
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    stats = HloStats()
+    dot_cache: dict = {}
+
+    def dot_flops_line(line: str, comp: _Comp) -> float:
+        dm = _DEF_RE.match(line)
+        out = 1
+        if dm:
+            for d in dm.group(3).split(","):
+                if d:
+                    out *= int(d)
+        ops = _operands(line)
+        contracted = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if m and ops:
+            lhs = comp.defs.get(ops[0])
+            if lhs:
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs[1]):
+                        contracted *= lhs[1][int(idx)]
+        return 2.0 * out * contracted
+
+    def comp_dot_flops(name: str) -> float:
+        if name in dot_cache:
+            return dot_cache[name]
+        dot_cache[name] = 0.0  # cycle guard
+        comp = comps.get(name)
+        total = 0.0
+        if comp is not None:
+            for line in comp.lines:
+                rhs = line.split(" = ", 1)[1] if " = " in line else line
+                if " dot(" in rhs or rhs.startswith("dot("):
+                    total += dot_flops_line(line, comp)
+                else:
+                    mcall = re.search(r"\b(?:calls|to_apply)=%?([\w\.\-]+)",
+                                      line)
+                    if mcall and ("fusion(" in rhs or " call(" in rhs):
+                        total += comp_dot_flops(mcall.group(1))
+        dot_cache[name] = total
+        return total
+
+    def line_total_bytes(line: str, comp: _Comp) -> float:
+        total = 0.0
+        dm = _DEF_RE.match(line)
+        if dm:
+            dims = tuple(int(x) for x in dm.group(3).split(",") if x)
+            total += _nbytes(dm.group(2), dims)
+        for op in _operands(line):
+            d = comp.defs.get(op)
+            if d:
+                total += _nbytes(*d)
+        return total
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        comp = comps.get(name)
+        if comp is None or depth > 30:
+            return
+        for line in comp.lines:
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            cm = _COLL_RE.search(line)
+            if cm:
+                kind = cm.group(1)
+                sizes = [s for s in (
+                    [_nbytes(*comp.defs[o]) for o in _operands(line)
+                     if o in comp.defs]
+                    + ([_nbytes(_DEF_RE.match(line).group(2),
+                                tuple(int(x) for x in _DEF_RE.match(line)
+                                      .group(3).split(",") if x))]
+                       if _DEF_RE.match(line) else []))]
+                if sizes:
+                    b = max(sizes) * _COLL_MULT[kind] * mult
+                    stats.collectives[kind] += b
+                    stats.collective_bytes += b
+                    stats.collective_counts[kind] += int(max(mult, 1))
+                    stats.bytes += max(sizes) * mult
+                continue
+            if " while(" in rhs or rhs.startswith("while("):
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = _trip_count(comps[mc.group(1)]) \
+                    if mc and mc.group(1) in comps else 1
+                if mb:
+                    walk(mb.group(1), mult * trips, depth + 1)
+                continue
+            if " conditional(" in rhs:
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mbr:
+                    for b in mbr.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, depth + 1)
+                continue
+            if " dot(" in rhs or " convolution(" in rhs:
+                stats.flops += dot_flops_line(line, comp) * mult
+                stats.bytes += line_total_bytes(line, comp) * mult
+                continue
+            if "fusion(" in rhs or " call(" in rhs:
+                mcall = re.search(r"\b(?:calls|to_apply)=%?([\w\.\-]+)",
+                                  line)
+                if mcall:
+                    stats.flops += comp_dot_flops(mcall.group(1)) * mult
+                stats.bytes += line_total_bytes(line, comp) * mult
+                continue
+            if any(t in rhs for t in _TRIVIAL):
+                continue
+            stats.bytes += line_total_bytes(line, comp) * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return stats

@@ -1,0 +1,151 @@
+"""Mesh construction + logical-axis sharding rules (MaxText-style).
+
+`make_production_mesh` is a FUNCTION so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Logical names are resolved to mesh axes through a rule table; resolution
+drops (a) axes absent from the active mesh (so single-pod and multi-pod use
+one rule set), (b) axes already consumed by an earlier dim of the same spec,
+and (c) axes that do not divide the dim size (40 heads over a 16-way model
+axis stays unsharded rather than relying on GSPMD padding).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+# Weight axes ('embed' is the FSDP dim), then activation axes.
+DEFAULT_RULES = {
+    "embed": ("data",),
+    "mlp": ("model",),
+    "qkv": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    # experts are sharded over 'data' (EP axis of the a2a dispatch; the
+    # 'model' axis column/row-shards each expert's matrices via 'mlp')
+    "experts": ("data",),
+    "q_lora": ("model",),
+    "ssm_inner": ("model",),
+    "layers": (),
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    # residual-stream activations are model-sharded (Megatron-SP style):
+    # the layer-boundary saves under scan-remat shrink 16x; XLA inserts
+    # the all-gathers at matmul entry.
+    "act_embed": ("model",),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_kv_seq": ("model",),
+    "act_vocab": ("model",),
+    "act_exp": ("model",),
+    "act_cap": ("pod", "data"),
+    "act_tokens": ("pod", "data"),
+    "act_frames": (),
+}
+
+# Per-shape overrides (see DESIGN §4).
+SHAPE_RULE_OVERRIDES = {
+    "train_4k": {},
+    "prefill_32k": {},
+    "decode_32k": {},
+    # batch=1: data-parallel axes carry the sequence instead (context/SP);
+    # the kv cache seq axis spreads over the whole mesh.
+    "long_500k": {"act_batch": (), "act_seq": ("pod", "data"),
+                  "act_cap": (), "act_tokens": (),
+                  "act_kv_seq": ("pod", "data", "model")},
+}
+
+
+def rules_for_shape(shape_name: Optional[str]) -> dict:
+    rules = dict(DEFAULT_RULES)
+    rules.update(SHAPE_RULE_OVERRIDES.get(shape_name or "", {}))
+    return rules
+
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: Optional[dict] = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def active_mesh():
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def resolve_spec(axes, shape, mesh, rules) -> P:
+    """Logical axes tuple -> PartitionSpec with the drop rules above."""
+    used = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            out.append(None)
+            continue
+        proposed = rules.get(name, ())
+        if isinstance(proposed, str):
+            proposed = (proposed,)
+        picked = []
+        prod = 1
+        for ax in proposed:
+            if ax not in mesh.shape or ax in used:
+                continue
+            size = mesh.shape[ax]
+            if dim % (prod * size) != 0:
+                continue
+            picked.append(ax)
+            prod *= size
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def shard(x, *axes):
+    """Apply a logical sharding constraint (no-op outside a context)."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} vs shape {x.shape}")
+    spec = resolve_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(axes, shape, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh, rules):
+    """Map parallel (axes, ShapeDtypeStruct) trees to NamedShardings."""
+    return jax.tree.map(
+        lambda ax, sh: sharding_for(ax, sh.shape, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))

@@ -1,0 +1,144 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs / (chips * peak)          [s]
+memory    = HLO_bytes / (chips * hbm_bw)        [s]
+collective= collective_bytes / (chips * ici_bw) [s]
+
+`compiled.cost_analysis()` on an SPMD-partitioned module reports PER-DEVICE
+flops/bytes (verified empirically), so global HLO_FLOPs = per-device x
+chips and the division by chips cancels — the terms below use per-device
+quantities directly. Collective bytes are parsed from the partitioned HLO
+text: per collective op we take the byte-maximal shape on the line (for
+all-gather that is the gathered result, for reduce-scatter the full
+operand — both ≈ ring wire bytes) with a 2x multiplier for all-reduce
+(reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class constants (per system prompt).
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_MULTIPLIER = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, from partitioned HLO."""
+    out = {k: 0.0 for k in _MULTIPLIER}
+    counts = {k: 0 for k in _MULTIPLIER}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line)]
+        if not sizes:
+            continue
+        out[kind] += max(sizes) * _MULTIPLIER[kind]
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, model_flops_global: float) -> float:
+        """useful_compute_time / roofline_step_time — the perf score."""
+        useful = model_flops_global / self.chips / PEAK_FLOPS
+        return useful / max(self.step_time_s, 1e-30)
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "chips": self.chips, "step_time_s": self.step_time_s,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    """Roofline terms from the while-aware HLO walk (hlo_stats). XLA's own
+    cost_analysis counts loop bodies once (scan-blind); it is kept in the
+    breakdown for reference."""
+    from . import hlo_stats
+    text = compiled.as_text()
+    st = hlo_stats.analyze_hlo(text)
+    ca = compiled.cost_analysis() or {}
+    return Roofline(
+        compute_s=st.flops / PEAK_FLOPS,
+        memory_s=st.bytes / HBM_BW,
+        collective_s=st.collective_bytes / ICI_BW,
+        flops_per_device=st.flops,
+        bytes_per_device=st.bytes,
+        collective_bytes_per_device=st.collective_bytes,
+        collective_breakdown={**st.collectives,
+                              "counts": st.collective_counts,
+                              "xla_cost_analysis_flops":
+                                  float(ca.get("flops", 0.0)),
+                              "xla_cost_analysis_bytes":
+                                  float(ca.get("bytes accessed", 0.0))},
+        chips=chips)
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,69 @@
+"""Production training launcher.
+
+On a real TPU pod each host runs:
+    python -m repro.launch.train --arch <id> --shape train_4k \
+        --ckpt-dir gs://... --steps 10000 --production-mesh [--multi-pod]
+(after repro.launch.cluster initializes jax.distributed). On this CPU
+container, run reduced configs:
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2_9b --smoke \
+        --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.data import PipelineConfig, TokenPipeline
+from repro.launch import mesh as meshlib
+from repro.models.model import Model
+from repro.optim import OptConfig
+from repro.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="runs/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    model = Model(cfg)
+    print(f"{cfg.name}: {model.num_params() / 1e6:.1f}M params, "
+          f"{len(jax.devices())} devices")
+
+    mesh = None
+    if args.production_mesh:
+        mesh = meshlib.make_production_mesh(multi_pod=args.multi_pod)
+    pipe = TokenPipeline(
+        PipelineConfig(cfg.vocab_size, args.batch, args.seq, seed=0),
+        num_hosts=jax.process_count(), host_id=jax.process_index())
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3, async_save=True)
+    trainer = Trainer(
+        model,
+        OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                  total_steps=args.steps),
+        pipe, ckpt=ckpt, mesh=mesh,
+        rules=meshlib.rules_for_shape(args.shape),
+        param_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    res = trainer.run(args.steps, ckpt_every=args.ckpt_every)
+    print(f"done: steps={res.steps_done} restarts={res.restarts} "
+          f"loss={res.losses[0]:.3f}->{res.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

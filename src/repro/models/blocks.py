@@ -1,0 +1,149 @@
+"""Per-layer blocks + pattern-group machinery (scan-over-groups)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe, ssm
+from .params import ParamSpec
+
+
+ATTN_KINDS = ("dense", "local", "global", "bidir", "moe", "xdec")
+
+
+def block_specs(cfg, kind):
+    d = cfg.d_model
+    if kind in ("dense", "local", "global", "bidir"):
+        attn = layers.mla_specs(cfg) if cfg.attention == "mla" \
+            else layers.gqa_specs(cfg)
+        return {"ln_attn": layers.norm_spec(d), "attn": attn,
+                "ln_mlp": layers.norm_spec(d), "mlp": layers.mlp_specs(cfg)}
+    if kind == "moe":
+        attn = layers.mla_specs(cfg) if cfg.attention == "mla" \
+            else layers.gqa_specs(cfg)
+        return {"ln_attn": layers.norm_spec(d), "attn": attn,
+                "ln_mlp": layers.norm_spec(d), "moe": moe.moe_specs(cfg)}
+    if kind == "ssm":
+        return {"ln": layers.norm_spec(d), "ssm": ssm.ssm_specs(cfg)}
+    if kind == "ssm_attn":
+        # mamba sublayer; the attention/MLP weights are SHARED (weight-tied
+        # zamba2 block) and live outside the stacked groups.
+        return {"ln": layers.norm_spec(d), "ssm": ssm.ssm_specs(cfg)}
+    if kind == "xdec":
+        return {"ln_attn": layers.norm_spec(d), "attn": layers.gqa_specs(cfg),
+                "ln_x": layers.norm_spec(d),
+                "xattn": layers.cross_attn_specs(cfg),
+                "ln_mlp": layers.norm_spec(d), "mlp": layers.mlp_specs(cfg)}
+    raise ValueError(kind)
+
+
+def shared_block_specs(cfg):
+    """Zamba2-style weight-tied attention+MLP block."""
+    d = cfg.d_model
+    return {"ln_attn": layers.norm_spec(d), "attn": layers.gqa_specs(cfg),
+            "ln_mlp": layers.norm_spec(d), "mlp": layers.mlp_specs(cfg)}
+
+
+def _apply_attn(p, x, cfg, kind, layer_kind, positions, cache, index):
+    if cfg.attention == "mla" and layer_kind != "bidir":
+        out, c = layers.apply_mla(p, x, cfg, kind=kind, positions=positions,
+                                  cache=cache, index=index)
+    else:
+        out, c = layers.apply_gqa(p, x, cfg, kind=kind,
+                                  layer_kind=layer_kind, positions=positions,
+                                  cache=cache, index=index)
+    # pin the residual delta to the residual-stream sharding: GSPMD then
+    # reduce-scatters the row-parallel projection instead of all-reducing
+    out = layers.shard(out, "act_batch", "act_seq", "act_embed")
+    return out, c
+
+
+def apply_block(p, x, cfg, block_kind, *, kind, positions, cache=None,
+                index=None, shared=None, memory=None):
+    """Returns (x, new_cache_for_this_block)."""
+    new_cache = {}
+    if block_kind in ("dense", "local", "global", "bidir", "moe", "xdec"):
+        a, c = _apply_attn(
+            p["attn"], layers.rms_norm(x, p["ln_attn"], cfg.norm_eps), cfg,
+            kind, block_kind, positions,
+            None if cache is None else cache.get("attn"), index)
+        x = x + a
+        if c is not None:
+            new_cache["attn"] = c
+        if block_kind == "xdec":
+            a, c = layers.apply_cross_attn(
+                p["xattn"], layers.rms_norm(x, p["ln_x"], cfg.norm_eps),
+                memory, cfg, kind=kind,
+                cache=None if cache is None else cache.get("xattn"))
+            x = x + a
+            if kind == "decode" and cache is not None:
+                new_cache["xattn"] = cache["xattn"]  # static after prefill
+            elif c is not None:
+                new_cache["xattn"] = c
+        h = layers.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        if block_kind == "moe":
+            x = x + moe.apply_moe(p["moe"], h, cfg)
+        else:
+            x = x + layers.apply_mlp(p["mlp"], h)
+    elif block_kind in ("ssm", "ssm_attn"):
+        h, c = ssm.apply_ssm(
+            p["ssm"], layers.rms_norm(x, p["ln"], cfg.norm_eps), cfg,
+            kind=kind, cache=None if cache is None else cache.get("ssm"))
+        x = x + h
+        if c is not None:
+            new_cache["ssm"] = c
+        if block_kind == "ssm_attn":
+            sp = shared
+            a, c = layers.apply_gqa(
+                sp["attn"], layers.rms_norm(x, sp["ln_attn"], cfg.norm_eps),
+                cfg, kind=kind, layer_kind="global", positions=positions,
+                cache=None if cache is None else cache.get("shared_attn"),
+                index=index)
+            x = x + a
+            if c is not None:
+                new_cache["shared_attn"] = c
+            x = x + layers.apply_mlp(
+                sp["mlp"], layers.rms_norm(x, sp["ln_mlp"], cfg.norm_eps))
+    else:
+        raise ValueError(block_kind)
+    return x, (new_cache or None)
+
+
+def cache_struct(cfg, block_kind, batch: int, seq: int, dtype):
+    """Zero-initialized cache pytree for one block."""
+    c = {}
+    if block_kind in ("dense", "local", "global", "moe", "xdec"):
+        if cfg.attention == "mla":
+            c["attn"] = {
+                "c_kv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, seq, cfg.rope_head_dim), dtype),
+            }
+        else:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            c["attn"] = {"k": jnp.zeros((batch, seq, hkv, hd), dtype),
+                         "v": jnp.zeros((batch, seq, hkv, hd), dtype)}
+        if block_kind == "xdec":
+            h, hd = cfg.num_heads, cfg.head_dim
+            sm = cfg.source_len
+            c["xattn"] = {"xk": jnp.zeros((batch, sm, h, hd), dtype),
+                          "xv": jnp.zeros((batch, sm, h, hd), dtype)}
+    if block_kind in ("ssm", "ssm_attn"):
+        d_inner, nheads, n = ssm.ssm_dims(cfg)
+        conv_dim = d_inner + 2 * n
+        c["ssm"] = {
+            "h": jnp.zeros((batch, nheads, n, cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+        if block_kind == "ssm_attn":
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            c["shared_attn"] = {
+                "k": jnp.zeros((batch, seq, hkv, hd), dtype),
+                "v": jnp.zeros((batch, seq, hkv, hd), dtype)}
+    return c
+
+
+def stack_specs(specs, groups: int):
+    """Prepend the stacked 'layers' dim to every ParamSpec in the tree."""
+    def f(s: ParamSpec):
+        return ParamSpec((groups,) + s.shape, ("layers",) + s.axes,
+                         init=s.init, scale=s.scale)
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,106 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+The modality frontend is a STUB per the assignment: `input_specs()` provides
+precomputed audio frame embeddings [B, source_len, d_model]; the encoder is
+a bidirectional transformer over them, the decoder a causal transformer with
+cross-attention. Decode caches both self-attention kv and the (static after
+prefill) cross-attention kv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, layers, lm
+from .params import ParamSpec
+
+
+def encdec_specs(cfg):
+    d = cfg.d_model
+    enc_pattern = {"0": blocks.block_specs(cfg, "bidir")}
+    dec_pattern = {"0": blocks.block_specs(cfg, "xdec")}
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"),
+                           scale=0.02),
+        "enc_groups": blocks.stack_specs(enc_pattern, cfg.encoder_layers),
+        "enc_norm": layers.norm_spec(d),
+        "dec_groups": blocks.stack_specs(dec_pattern, cfg.num_layers),
+        "final_norm": layers.norm_spec(d),
+        "lm_head": layers.linear_spec(d, cfg.padded_vocab, "embed", "vocab"),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: [B, Sm, D] stub embeddings -> encoder memory [B, Sm, D]."""
+    b, sm, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(sm, dtype=jnp.int32), (b, sm))
+
+    def body(x, gp):
+        x, _ = blocks.apply_block(gp["0"], x, cfg, "bidir", kind="prefill",
+                                  positions=positions)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames, params["enc_groups"])
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _run_decoder(params, cfg, x, memory, *, kind, positions, cache=None,
+                 index=None):
+    def body(xcarry, xs):
+        gp, gc = xs
+        xcarry, nc = blocks.apply_block(
+            gp["0"], xcarry, cfg, "xdec", kind=kind, positions=positions,
+            cache=None if gc is None else gc["0"], index=index,
+            memory=memory)
+        return xcarry, {"0": nc}
+
+    if kind == "train":
+        bodyc = jax.checkpoint(lambda c, gp: body(c, (gp, None)))
+        x, _ = jax.lax.scan(bodyc, x, params["dec_groups"])
+        return x, None
+    if cache is None:
+        x, nc = jax.lax.scan(lambda c, gp: body(c, (gp, None)),
+                             x, params["dec_groups"])
+        return x, nc
+    x, nc = jax.lax.scan(body, x, (params["dec_groups"], cache))
+    return x, nc
+
+
+def encdec_forward(params, cfg, frames, tokens, *, kind,
+                   return_hidden: bool = False):
+    """Train/prefill: encode frames, decode tokens. Returns (logits, cache)."""
+    memory = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = _run_decoder(params, cfg, x, memory, kind=kind,
+                            positions=positions)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, cache
+    return layers.linear(params["lm_head"], x), cache
+
+
+def encdec_decode_step(params, cfg, cache, token, index):
+    """One decode step; cross-attention kv comes from the cache."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    x, new_cache = _run_decoder(params, cfg, x, None, kind="decode",
+                                positions=positions, cache=cache,
+                                index=index)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return layers.linear(params["lm_head"], x)[:, 0], new_cache
+
+
+def encdec_init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    per = {"0": blocks.cache_struct(cfg, "xdec", batch, seq, dtype)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), per)
+
+
+def encdec_cache_axes(cfg):
+    kv = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+    xkv = ("layers", "act_batch", "act_frames", "act_heads", None)
+    return {"0": {"attn": {"k": kv, "v": kv},
+                  "xattn": {"xk": xkv, "xv": xkv}}}

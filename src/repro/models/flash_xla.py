@@ -1,0 +1,164 @@
+"""Flash attention in pure XLA with a custom VJP — the dry-run/backward
+analogue of kernels/flash_attention.py (which is the TPU Pallas hot path).
+
+Why: materialized [B,H,Sq,Skv] logits at 4k-32k sequence lengths exceed HBM
+even sharded, and differentiating a lax.scan online-softmax saves the O(Sq)
+accumulator per kv-step. The fix is the standard flash factorization:
+
+  forward : scan kv chunks with (m, l, acc) carry; keep only (o, lse).
+  backward: recompute S/P per kv chunk from (q, k, v, lse), accumulate
+            dq; emit per-chunk dk/dv. Residuals are O(S), not O(S^2).
+
+Supports causal masks, right-aligned queries (q_offset = skv - sq),
+sliding windows (gemma2 local), attention-logit softcap, and GQA grouping
+(q: [B,Sq,H,Dk], k/v: [B,Skv,Hkv,Dk/Dv], H % Hkv == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _chunk_mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    qp, kp = qpos[:, None], kpos[None, :]
+    if causal:
+        m &= qp >= kp
+    if window is not None:
+        m &= (qp - kp) < window
+    return m
+
+
+def _logits(qg, kb, scale, softcap, mask):
+    s = jnp.einsum("bkgqd,bskd->bkgqs", qg, kb) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return jnp.where(mask[None, None, None], s, _NEG)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal: bool, window, softcap,
+                        q_offset: int, chunk: int):
+    """q: [B,Sq,H,Dk]; k: [B,Skv,Hkv,Dk]; v: [B,Skv,Hkv,Dv] -> [B,Sq,H,Dv]."""
+    o, _ = _fwd_impl(q, k, v, causal, window, softcap, q_offset, chunk)
+    return o
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, q_offset, chunk):
+    b, sq, h, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        chunk = skv
+    nk = skv // chunk
+    scale = 1.0 / np.sqrt(dk)
+
+    qg = q.reshape(b, sq, hkv, g, dk).transpose(0, 2, 3, 1, 4).astype(
+        jnp.float32)                                   # [b,hkv,g,sq,dk]
+    kc = k.reshape(b, nk, chunk, hkv, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq, dtype=jnp.int32) + q_offset
+    kpos = jnp.arange(skv, dtype=jnp.int32).reshape(nk, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp = xs
+        mask = _chunk_mask(qpos, kp, causal, window)
+        s = _logits(qg, kb.astype(jnp.float32), scale, softcap, mask)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpos))
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-37)),
+                    jnp.float32(-_NEG))  # +BIG => p=0 for empty rows
+    o = acc / jnp.maximum(l, 1e-37)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+    return o, lse
+
+
+def _fwd_rule(q, k, v, causal, window, softcap, q_offset, chunk):
+    o, lse = _fwd_impl(q, k, v, causal, window, softcap, q_offset, chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_rule(causal, window, softcap, q_offset, chunk, res, do):
+    q, k, v, o, lse = res
+    b, sq, h, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        chunk = skv
+    nk = skv // chunk
+    scale = 1.0 / np.sqrt(dk)
+
+    qg = q.reshape(b, sq, hkv, g, dk).transpose(0, 2, 3, 1, 4).astype(
+        jnp.float32)
+    dog = do.reshape(b, sq, hkv, g, dv).transpose(0, 2, 3, 1, 4).astype(
+        jnp.float32)
+    og = o.reshape(b, sq, hkv, g, dv).transpose(0, 2, 3, 1, 4).astype(
+        jnp.float32)
+    delta = jnp.sum(dog * og, axis=-1)                 # [b,hkv,g,sq]
+    kc = k.reshape(b, nk, chunk, hkv, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq, dtype=jnp.int32) + q_offset
+    kpos = jnp.arange(skv, dtype=jnp.int32).reshape(nk, chunk)
+
+    def body(dq_acc, xs):
+        kb, vb, kp = xs
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        mask = _chunk_mask(qpos, kp, causal, window)
+        s_raw = jnp.einsum("bkgqd,bskd->bkgqs", qg, kf) * scale
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = jnp.where(mask[None, None, None], softcap * t, _NEG)
+        else:
+            s = jnp.where(mask[None, None, None], s_raw, _NEG)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        dvb = jnp.einsum("bkgqs,bkgqd->bskd", p, dog)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", dog, vf)
+        ds = p * (dp - delta[..., None])
+        if softcap is not None:
+            ds = ds * (1.0 - t * t)
+        ds = ds * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bkgqd", ds, kf)
+        dkb = jnp.einsum("bkgqs,bkgqd->bskd", ds, qg)
+        return dq_acc, (dkb, dvb)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, dk), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, kpos))
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dk).astype(q.dtype)
+    dk_out = dks.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, dk).astype(
+        k.dtype)
+    dv_out = dvs.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, dv).astype(
+        v.dtype)
+    return dq, dk_out, dv_out
+
+
+flash_attention_xla.defvjp(_fwd_rule, _bwd_rule)
+
+
+def attend_flash(q, k, v, *, causal, window, softcap, q_offset: int = 0,
+                 chunk: int = 512):
+    """layers.py-convention wrapper. q: [B,Sq,H,D]; k/v: [B,Skv,Hkv,D']."""
+    return flash_attention_xla(q, k, v, causal, window, softcap, q_offset,
+                               chunk)

@@ -1,0 +1,333 @@
+"""Shared pure-JAX layers for the architecture zoo.
+
+Attention paths:
+  * train: materialized-logits attention (remat'd per layer group) — used
+    for train_4k where per-device logit blocks are small;
+  * prefill: chunked online-softmax attention (lax.scan over kv chunks) —
+    forward-only, keeps 32k-sequence memory bounded (XLA analogue of the
+    Pallas flash kernel in repro.kernels, which is the TPU hot path);
+  * decode: single-token attention over a cache.
+
+Sharding constraints use logical names resolved by repro.launch.mesh.shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from .params import ParamSpec
+
+shard = meshlib.shard
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+# ---------------------------------------------------------------- basics
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_spec(d):
+    return ParamSpec((d,), (None,), init="ones")
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, Dh] (Dh even); positions broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def linear_spec(d_in, d_out, in_ax, out_ax, *, bias=False):
+    s = {"w": ParamSpec((d_in, d_out), (in_ax, out_ax))}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (out_ax,), init="zeros")
+    return s
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_specs(cfg, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    return {
+        "gate_up": linear_spec(cfg.d_model, 2 * d_ff, "embed", "mlp"),
+        "down": linear_spec(d_ff, cfg.d_model, "mlp", "embed"),
+    }
+
+
+def apply_mlp(p, x):
+    gu = linear(p["gate_up"], x)
+    gate, up = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "act_batch", "act_seq", "act_mlp")
+    out = linear(p["down"], h)
+    if out.ndim == 3:  # pin the residual delta (reduce-scatter, not AR)
+        out = shard(out, "act_batch", "act_seq", "act_embed")
+    return out
+
+
+# -------------------------------------------------------- attention core
+def _mask_logits(s, qpos, kpos, *, causal, window, kv_len=None):
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    qp = qpos[:, None]
+    kp = kpos[None, :]
+    if causal:
+        mask = mask & (qp >= kp)
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+    if kv_len is not None:
+        mask = mask & (kp < kv_len)
+    return jnp.where(mask, s, _NEG)
+
+
+def attend_full(q, k, v, *, causal, window, softcap, qpos, kpos, kv_len=None):
+    """Materialized-logits attention. q: [B,S,H,D]; k/v: [B,Skv,Hkv,D]."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = _mask_logits(s, qpos, kpos, causal=causal, window=window,
+                     kv_len=kv_len)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal, window, softcap, qpos, kpos,
+                   chunk: int = 1024):
+    """Forward-only online-softmax attention, scanning kv chunks."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    if skv % chunk:
+        chunk = skv  # fallback for odd sizes (tests)
+    nk = skv // chunk
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    kc = k.reshape(b, nk, chunk, hkv, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, hkv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    kposc = kpos.reshape(nk, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb.astype(jnp.float32)) \
+            / np.sqrt(d)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = _mask_logits(s, qpos, kp, causal=causal, window=window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    dv = v.shape[-1]
+    m0 = jnp.full((b, hkv, group, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kposc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)  # [b, sq, hkv, g, dv]
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, *, window, softcap, index):
+    """One-token attention over the cache. q: [B,1,H,D]; caches [B,S,Hkv,D]."""
+    b, _, h, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) \
+        / np.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = jnp.arange(skv)
+    valid = kp[None, None, None, :] <= index
+    if window is not None:
+        valid &= (index - kp[None, None, None, :]) < window
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ GQA
+def gqa_specs(cfg):
+    h, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": linear_spec(d, h * hd, "embed", "qkv", bias=cfg.qkv_bias),
+        "wk": linear_spec(d, hkv * hd, "embed", "kv", bias=cfg.qkv_bias),
+        "wv": linear_spec(d, hkv * hd, "embed", "kv", bias=cfg.qkv_bias),
+        "wo": linear_spec(h * hd, d, "qkv", "embed"),
+    }
+
+
+def apply_gqa(p, x, cfg, *, kind, layer_kind, positions, cache=None,
+              index=None):
+    """kind: train|prefill|decode. Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = cfg.local_window if layer_kind == "local" else None
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    k = linear(p["wk"], x).reshape(b, s, hkv, hd)
+    v = linear(p["wv"], x).reshape(b, s, hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+
+    if kind == "decode":
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, index, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, index, 1)
+        o = attend_decode(q, k_cache, v_cache, window=window,
+                          softcap=cfg.attn_softcap, index=index)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        from .flash_xla import attend_flash
+        o = attend_flash(q, k, v, causal=not (layer_kind == "bidir"),
+                         window=window, softcap=cfg.attn_softcap)
+        new_cache = {"k": k, "v": v} if kind == "prefill" else None
+    o = shard(o, "act_batch", "act_seq", "act_heads", None)
+    return linear(p["wo"], o.reshape(b, s, h * hd)), new_cache
+
+
+def cross_attn_specs(cfg):
+    h, hd, d = cfg.num_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": linear_spec(d, h * hd, "embed", "qkv"),
+        "wk": linear_spec(d, h * hd, "embed", "qkv"),
+        "wv": linear_spec(d, h * hd, "embed", "qkv"),
+        "wo": linear_spec(h * hd, d, "qkv", "embed"),
+    }
+
+
+def apply_cross_attn(p, x, memory, cfg, *, kind, cache=None):
+    """Encoder-decoder cross attention (memory: [B, Sm, D] or cached k/v)."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    if cache is not None and "xk" in cache:
+        k, v = cache["xk"], cache["xv"]
+    else:
+        sm = memory.shape[1]
+        k = linear(p["wk"], memory).reshape(b, sm, h, hd)
+        v = linear(p["wv"], memory).reshape(b, sm, h, hd)
+    from .flash_xla import attend_flash
+    o = attend_flash(q, k, v, causal=False, window=None, softcap=None)
+    new_cache = {"xk": k, "xv": v} if kind == "prefill" else None
+    return linear(p["wo"], o.reshape(b, s, h * hd)), new_cache
+
+
+# ------------------------------------------------------------------ MLA
+def mla_specs(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    r, nd, vd = cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    s = {
+        "wkv_a": linear_spec(d, cfg.kv_lora_rank + r, "embed", "kv"),
+        "kv_norm": norm_spec(cfg.kv_lora_rank),
+        "wkv_b": linear_spec(cfg.kv_lora_rank, h * (nd + vd), "kv", "qkv"),
+        "wo": linear_spec(h * vd, d, "qkv", "embed"),
+    }
+    if cfg.q_lora_rank:
+        s["wq_a"] = linear_spec(d, cfg.q_lora_rank, "embed", None)
+        s["q_norm"] = norm_spec(cfg.q_lora_rank)
+        s["wq_b"] = linear_spec(cfg.q_lora_rank, h * (nd + r), None, "qkv")
+    else:
+        s["wq"] = linear_spec(d, h * (nd + r), "embed", "qkv")
+    return s
+
+
+def _mla_q(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, r, nd = cfg.num_heads, cfg.rope_head_dim, cfg.nope_head_dim
+    if cfg.q_lora_rank:
+        qa = rms_norm(linear(p["wq_a"], x), p["q_norm"], cfg.norm_eps)
+        q = linear(p["wq_b"], qa)
+    else:
+        q = linear(p["wq"], x)
+    q = q.reshape(b, s, h, nd + r)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(p, x, cfg, *, kind, positions, cache=None, index=None):
+    """DeepSeek-style multi-head latent attention.
+
+    Cache holds the *compressed* kv (kv_lora) + shared rope key — the memory
+    saving that is MLA's point. Decode uses the absorbed formulation.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    r, nd, vd = cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+
+    kv_a = linear(p["wkv_a"], x)                      # [b, s, lora + r]
+    c_kv = rms_norm(kv_a[..., :lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, lora:], positions, cfg.rope_theta)[:, :, 0]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+
+    wkv_b = p["wkv_b"]["w"].reshape(lora, h, nd + vd)
+    w_uk = wkv_b[..., :nd]                            # [lora, h, nd]
+    w_uv = wkv_b[..., nd:]                            # [lora, h, vd]
+
+    if kind == "decode":
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, index, 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, index, 1)
+        # absorbed: score = (q_nope W_uk) . c  +  q_rope . k_rope
+        q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        s_nope = jnp.einsum("bhl,bsl->bhs", q_abs,
+                            c_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bhr,bsr->bhs",
+                            q_rope[:, 0].astype(jnp.float32),
+                            r_cache.astype(jnp.float32))
+        logits = (s_nope + s_rope) / np.sqrt(nd + r)
+        kp = jnp.arange(c_cache.shape[1])
+        logits = jnp.where(kp[None, None, :] <= index, logits, _NEG)
+        pr = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhs,bsl->bhl", pr, c_cache.astype(jnp.float32))
+        o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv.astype(jnp.float32))
+        o = o.reshape(b, 1, h * vd).astype(x.dtype)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+    else:
+        # expanded: materialize per-head k_nope / v from the latent
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, w_uk.astype(c_kv.dtype))
+        v = jnp.einsum("bsl,lhv->bshv", c_kv, w_uv.astype(c_kv.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, r))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = shard(q, "act_batch", "act_seq", "act_heads", None)
+        from .flash_xla import attend_flash
+        o = attend_flash(q, k, v, causal=True, window=None, softcap=None)
+        o = o.reshape(b, s, h * vd)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope} \
+            if kind == "prefill" else None
+    return linear(p["wo"], o), new_cache

@@ -1,0 +1,234 @@
+"""Decoder-only LM (covers dense / moe / ssm / hybrid / vlm families)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import mesh as meshlib
+from . import blocks, layers
+from .params import ParamSpec
+
+shard = meshlib.shard
+
+
+def lm_specs(cfg):
+    d = cfg.d_model
+    pattern = {str(i): blocks.block_specs(cfg, k)
+               for i, k in enumerate(cfg.layer_pattern)}
+    specs = {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"),
+                           scale=0.02),
+        "groups": blocks.stack_specs(pattern, cfg.pattern_groups),
+        "final_norm": layers.norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = layers.linear_spec(d, cfg.padded_vocab,
+                                              "embed", "vocab")
+    if "ssm_attn" in cfg.layer_pattern:
+        specs["shared"] = blocks.shared_block_specs(cfg)
+    return specs
+
+
+def _sqrt_split(g: int):
+    """Factor g = go * gi minimizing go + gi (sqrt activation remat)."""
+    best = (g, 1)
+    for d in range(2, int(g ** 0.5) + 1):
+        if g % d == 0 and (g // d + d) < sum(best):
+            best = (g // d, d)
+    return best
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+        logits = x @ w
+    else:
+        logits = layers.linear(params["lm_head"], x)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def _run_groups(params, cfg, x, *, kind, positions, cache=None, index=None,
+                memory=None):
+    shared = params.get("shared")
+    pattern = cfg.layer_pattern
+
+    def body(xcarry, xs):
+        gp, gc = xs
+        ncs = {}
+        for i, k in enumerate(pattern):
+            xcarry, nc = blocks.apply_block(
+                gp[str(i)], xcarry, cfg, k, kind=kind, positions=positions,
+                cache=None if gc is None else gc[str(i)], index=index,
+                shared=shared, memory=memory)
+            ncs[str(i)] = nc
+        xcarry = shard(xcarry, "act_batch", "act_seq", "act_embed")
+        return xcarry, ncs
+
+    if kind == "train":
+        # sqrt-remat: two-level scan. The outer scan saves only G_outer
+        # residual-stream slices; each inner segment recomputes its layers
+        # in the backward. Cuts the saved-activation stack from G to
+        # ~2*sqrt(G) slices (the qwen 80-layer f32 stack: 10GB -> ~1.3GB).
+        body_fn = jax.checkpoint(lambda c, gp: body(c, (gp, None)))
+        g = cfg.pattern_groups
+        go, gi = _sqrt_split(g)
+        if gi == 1:
+            x, _ = jax.lax.scan(body_fn, x, params["groups"])
+            return x, None
+        groups2 = jax.tree.map(
+            lambda a: a.reshape((go, gi) + a.shape[1:]), params["groups"])
+
+        def outer(c, gps):
+            c2, _ = jax.lax.scan(body_fn, c, gps)
+            return c2, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(outer), x, groups2)
+        return x, None
+    if cache is None:  # prefill: build the cache from the scan outputs
+        x, new_cache = jax.lax.scan(lambda c, gp: body(c, (gp, None)),
+                                    x, params["groups"])
+        return x, new_cache
+    # decode: keep the cache in the scan CARRY and update slices in place
+    # (dynamic-index read + dynamic-update write). With xs/ys stacking XLA
+    # double-buffers the full cache (H3 in EXPERIMENTS.md §Perf).
+    def body_decode(carry, xs):
+        xc, cache_c = carry
+        gp, idx = xs
+        gc = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False), cache_c)
+        xc, ncs = body(xc, (gp, gc))
+        cache_c = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0), cache_c, ncs)
+        return (xc, cache_c), None
+
+    g = cfg.pattern_groups
+    (x, new_cache), _ = jax.lax.scan(
+        body_decode, (x, cache),
+        (params["groups"], jnp.arange(g, dtype=jnp.int32)))
+    return x, new_cache
+
+
+def lm_forward(params, cfg, tokens, *, kind, patch_embeds=None,
+               return_hidden: bool = False):
+    """Full-sequence forward (train or prefill). Returns (logits, cache),
+    or (final-normed hidden, cache) with return_hidden (chunked-CE path)."""
+    x = _embed(params, cfg, tokens)
+    if patch_embeds is not None:  # vlm: prepend stub patch embeddings
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = _run_groups(params, cfg, x, kind=kind, positions=positions)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, cache
+    return _logits(params, cfg, x), cache
+
+
+def lm_decode_step(params, cfg, cache, token, index):
+    """One decode step. token: [B] int32; index: scalar int32 position."""
+    x = _embed(params, cfg, token[:, None])
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    x, new_cache = _run_groups(params, cfg, x, kind="decode",
+                               positions=positions, cache=cache, index=index)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Zeroed decode cache, stacked over pattern groups ([G, ...] leaves)."""
+    per_group = {str(i): blocks.cache_struct(cfg, k, batch, seq, dtype)
+                 for i, k in enumerate(cfg.layer_pattern)}
+    per_group = {k: v for k, v in per_group.items() if v}
+    g = cfg.pattern_groups
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), per_group)
+
+
+def cache_axes(cfg):
+    """Logical axes tree matching init_cache structure."""
+    def axes_for(block_kind):
+        c = {}
+        if block_kind in ("dense", "local", "global", "moe", "xdec"):
+            if cfg.attention == "mla":
+                c["attn"] = {"c_kv": ("layers", "act_batch", "act_kv_seq",
+                                      None),
+                             "k_rope": ("layers", "act_batch", "act_kv_seq",
+                                        None)}
+            else:
+                kv = ("layers", "act_batch", "act_kv_seq", "act_kv_heads",
+                      None)
+                c["attn"] = {"k": kv, "v": kv}
+            if block_kind == "xdec":
+                xkv = ("layers", "act_batch", "act_frames", "act_heads", None)
+                c["xattn"] = {"xk": xkv, "xv": xkv}
+        if block_kind in ("ssm", "ssm_attn"):
+            c["ssm"] = {"h": ("layers", "act_batch", "act_heads", None, None),
+                        "conv": ("layers", "act_batch", None, "act_mlp")}
+            if block_kind == "ssm_attn":
+                kv = ("layers", "act_batch", "act_kv_seq", "act_kv_heads",
+                      None)
+                c["shared_attn"] = {"k": kv, "v": kv}
+        return c
+    per_group = {str(i): axes_for(k)
+                 for i, k in enumerate(cfg.layer_pattern)}
+    return {k: v for k, v in per_group.items() if v}
+
+
+def chunked_ce(head_fn, x, labels, vocab_size: int, *, chunk: int = 512):
+    """Fused cross-entropy over sequence chunks.
+
+    Never materializes [B, S, V] logits: each chunk's logits are computed,
+    reduced, and (via jax.checkpoint) recomputed in the backward. x is the
+    final-normed hidden state [B, S, D]; head_fn maps [B, c, D] -> logits.
+    """
+    b, s, d = x.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xch, lch = xs
+        logits = head_fn(xch).astype(jnp.float32)
+        v = logits.shape[-1]
+        if v > vocab_size:
+            logits = logits + jnp.where(jnp.arange(v) >= vocab_size,
+                                        -1e9, 0.0)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lch, 0)[..., None], -1)[..., 0]
+        valid = (lch >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((logz - gold) * valid),
+                cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(logits, labels, vocab_size: int):
+    """Mean CE over labels >= 0 (padded-vocab columns masked out)."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    if v > vocab_size:
+        pad_mask = jnp.arange(v) >= vocab_size
+        logits = logits + jnp.where(pad_mask, -1e9, 0.0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], -1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,176 @@
+"""Top-level model facade: config -> params/specs, train loss, prefill,
+decode, and dry-run input specs (ShapeDtypeStruct + logical axes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm, params as P
+from .config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- specs
+    def param_specs(self):
+        if self.cfg.is_encoder_decoder:
+            return encdec.encdec_specs(self.cfg)
+        return lm.lm_specs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return P.init_params(self.param_specs(), key, dtype)
+
+    def param_shapes(self, dtype=jnp.bfloat16):
+        return P.param_shapes(self.param_specs(), dtype)
+
+    def param_axes(self):
+        return P.param_axes(self.param_specs())
+
+    def num_params(self) -> int:
+        return P.count_params(self.param_specs())
+
+    # -------------------------------------------------------------- loss
+    def loss_fn(self, params, batch):
+        """Train loss via the chunked-CE path ([B,S,V] logits never
+        materialize; chunk logits recomputed in backward)."""
+        cfg = self.cfg
+        from repro.models import layers as L
+        if cfg.is_encoder_decoder:
+            hidden, _ = encdec.encdec_forward(
+                params, cfg, batch["frames"], batch["tokens"], kind="train",
+                return_hidden=True)
+            head = lambda xc: L.linear(params["lm_head"], xc)
+        elif cfg.family == "vlm":
+            hidden, _ = lm.lm_forward(
+                params, cfg, batch["tokens"], kind="train",
+                patch_embeds=batch["patch_embeds"], return_hidden=True)
+            head = lambda xc: lm._logits(params, cfg, xc)
+        else:
+            hidden, _ = lm.lm_forward(params, cfg, batch["tokens"],
+                                      kind="train", return_hidden=True)
+            head = lambda xc: lm._logits(params, cfg, xc)
+        return lm.chunked_ce(head, hidden, batch["labels"], cfg.vocab_size)
+
+    # ----------------------------------------------------------- serving
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return encdec.encdec_forward(params, cfg, batch["frames"],
+                                         batch["tokens"], kind="prefill")
+        if cfg.family == "vlm":
+            return lm.lm_forward(params, cfg, batch["tokens"],
+                                 kind="prefill",
+                                 patch_embeds=batch["patch_embeds"])
+        return lm.lm_forward(params, cfg, batch["tokens"], kind="prefill")
+
+    def decode_step(self, params, cache, token, index):
+        if self.cfg.is_encoder_decoder:
+            return encdec.encdec_decode_step(params, self.cfg, cache, token,
+                                             index)
+        return lm.lm_decode_step(params, self.cfg, cache, token, index)
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        if self.cfg.is_encoder_decoder:
+            return encdec.encdec_init_cache(self.cfg, batch, seq, dtype)
+        return lm.init_cache(self.cfg, batch, seq, dtype)
+
+    def cache_axes(self):
+        if self.cfg.is_encoder_decoder:
+            return encdec.encdec_cache_axes(self.cfg)
+        return lm.cache_axes(self.cfg)
+
+    def cache_shapes(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, seq, dtype))
+
+    def pad_cache(self, cache, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        """Right-pad a prefill cache (prompt length) to decode capacity."""
+        template = self.cache_shapes(batch, max_seq, dtype)
+
+        def pad(leaf, tmpl):
+            pads = [(0, t - s) for s, t in zip(leaf.shape, tmpl.shape)]
+            if any(p != (0, 0) for p in pads):
+                leaf = jnp.pad(leaf, pads)
+            return leaf.astype(tmpl.dtype)
+
+        return jax.tree.map(pad, cache, template)
+
+    # ------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-ins + logical axes for every model input.
+
+        train:  {tokens, labels[, patch_embeds | frames]}
+        prefill:{tokens[, patch_embeds | frames]}
+        decode: {token, index, cache}
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok_ax = ("act_batch", "act_seq")
+        specs, axes = {}, {}
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                p = cfg.num_patch_tokens
+                text = s - p
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, p, cfg.d_model), dtype)
+                axes["patch_embeds"] = ("act_batch", "act_seq", "act_embed")
+                specs["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+                axes["tokens"] = tok_ax
+                if shape.kind == "train":
+                    specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                    axes["labels"] = tok_ax
+            elif cfg.is_encoder_decoder:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.source_len, cfg.d_model), dtype)
+                axes["frames"] = ("act_batch", "act_frames", "act_embed")
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["tokens"] = tok_ax
+                if shape.kind == "train":
+                    specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                    axes["labels"] = tok_ax
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["tokens"] = tok_ax
+                if shape.kind == "train":
+                    specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                    axes["labels"] = tok_ax
+        else:  # decode
+            specs["token"] = jax.ShapeDtypeStruct((b,), i32)
+            axes["token"] = ("act_batch",)
+            specs["index"] = jax.ShapeDtypeStruct((), i32)
+            axes["index"] = ()
+            specs["cache"] = self.cache_shapes(b, s, dtype)
+            axes["cache"] = self.cache_axes()
+        return specs, axes
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N·D train (3 fwd+bwd passes worth of 2·N·D), 2·N·D
+    decode/prefill; N = active params (MoE counts top_k+shared experts)."""
+    n_total = P.count_params(
+        encdec.encdec_specs(cfg) if cfg.is_encoder_decoder
+        else lm.lm_specs(cfg))
+    if cfg.num_experts:
+        # subtract inactive routed experts
+        f, d, e = cfg.d_ff, cfg.d_model, cfg.num_experts
+        per_expert = 3 * d * f
+        moe_layers = sum(1 for k in cfg.layer_pattern if k == "moe") \
+            * cfg.pattern_groups
+        inactive = (e - cfg.moe_top_k) * per_expert * moe_layers
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per row
+    return 2.0 * n_active * tokens

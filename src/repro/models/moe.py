@@ -1,0 +1,239 @@
+"""Mixture-of-experts block: top-k router + capacity-based dispatch.
+
+Two dispatch paths:
+
+* `_apply_moe_a2a` (production, shard_map): token-split all-to-all over the
+  'model' axis (routing work divided across TP ranks at full d_model),
+  all-to-all over the 'data' axis to the expert-parallel owners, expert
+  matmuls against per-layer re-gathered full-F weights, gate-weighted
+  return path. See EXPERIMENTS.md §Perf H2 for why this beats letting
+  GSPMD lower the global scatter (TB-scale payload all-gathers).
+* `_apply_moe_dense` (fallback: single device / indivisible meshes): the
+  sort-based capacity scheme — tokens sorted by expert id, positioned
+  within capacity windows, scattered into [experts, capacity, d_model].
+
+Overflow tokens beyond capacity are dropped in both (standard Switch-style
+behavior, capacity_factor knob); the paths agree bit-for-bit up to drop
+tie-breaking (tests/test_distributed.py::test_moe_a2a_matches_dense...).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from . import layers
+from .params import ParamSpec
+
+shard = meshlib.shard
+
+
+def moe_specs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = {
+        "router": ParamSpec((d, e), (None, None)),  # small; replicated
+        "w_gate": ParamSpec((e, d, f), ("experts", None, "mlp")),
+        "w_up": ParamSpec((e, d, f), ("experts", None, "mlp")),
+        "w_down": ParamSpec((e, f, d), ("experts", "mlp", None)),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = layers.mlp_specs(cfg, d_ff=f * cfg.num_shared_experts)
+    return s
+
+
+def capacity_for(num_tokens: int, cfg) -> int:
+    c = int(np.ceil(num_tokens * cfg.moe_top_k * cfg.capacity_factor
+                    / cfg.num_experts))
+    return max(-(-c // 128) * 128, 128)
+
+
+def apply_moe(p, x, cfg):
+    """MoE block. Uses the all-to-all expert-parallel dispatch (shard_map)
+    when a production mesh with ('data','model') axes is active and the
+    expert count divides the data axis; falls back to the single-program
+    sort/scatter dispatch otherwise (single device, tests)."""
+    mesh = meshlib.active_mesh()
+    if mesh is not None and "data" in mesh.shape and "model" in mesh.shape:
+        nd, tp = mesh.shape["data"], mesh.shape["model"]
+        npod = mesh.shape.get("pod", 1)
+        b, s_len, d = x.shape
+        t_loc = (b // (nd * npod)) * s_len if b % (nd * npod) == 0 else 0
+        if (cfg.num_experts % nd == 0 and cfg.d_ff % tp == 0
+                and d % tp == 0 and t_loc > 0 and t_loc % tp == 0):
+            return _apply_moe_a2a(p, x, cfg, mesh)
+    return _apply_moe_dense(p, x, cfg)
+
+
+def _apply_moe_dense(p, x, cfg):
+    """x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    t = b * s
+    cap = capacity_for(t, cfg)
+    tokens = shard(x.reshape(t, d), "act_tokens", "act_embed")
+
+    logits = (tokens.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))            # [T, E]
+    logits = shard(logits, "act_tokens", None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # [T, k]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)                                # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)   # [T*k]
+    flat_g = gate.reshape(-1)
+
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    st = flat_t[order]
+    sg = flat_g[order]
+    start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - start[se].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)          # drop -> OOB
+
+    gathered = shard(tokens[st], "act_tokens", "act_embed")
+    disp = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+        gathered, mode="drop").reshape(e, cap, d)
+    disp = shard(disp, "act_exp", "act_cap", None)
+
+    g = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", disp, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "act_exp", "act_cap", "act_mlp")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_e = shard(out_e, "act_exp", "act_cap", None)
+
+    flat_out = out_e.reshape(e * cap, d)
+    contrib = flat_out[jnp.minimum(slot, e * cap - 1)] * (
+        sg * keep.astype(sg.dtype))[:, None].astype(x.dtype)
+    contrib = shard(contrib, "act_tokens", "act_embed")
+    y = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    y = shard(y, "act_tokens", "act_embed").reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        y = y + layers.apply_mlp(p["shared"], x)
+    return y
+
+
+# ---------------------------------------------------------------------
+# all-to-all expert parallelism (the production dispatch)
+# ---------------------------------------------------------------------
+def _local_dispatch_indices(eidx, gate, e, cap_send, nd):
+    """Per-device routing tables. eidx/gate: [t_loc, k].
+
+    Returns (slot [t_loc*k] into an [nd, e_loc*cap_send] send buffer,
+    tok [t_loc*k], gate_flat, keep).
+    """
+    t_loc, k = eidx.shape
+    e_loc = e // nd
+    flat_e = eidx.reshape(-1)
+    tok = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), k)
+    gate_flat = gate.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t_loc * k, dtype=jnp.int32) - start[se].astype(jnp.int32)
+    keep = pos < cap_send
+    owner = se // e_loc                       # data-row that owns expert
+    within = (se % e_loc) * cap_send + pos    # slot on the owner
+    slot = jnp.where(keep, owner * (e_loc * cap_send) + within,
+                     nd * e_loc * cap_send)   # OOB -> dropped
+    return slot, tok[order], gate_flat[order], keep
+
+
+def _apply_moe_a2a(p, x, cfg, mesh):
+    """shard_map MoE with token-split dispatch.
+
+    1. all-to-all over 'model': D-sharded tokens -> each model rank gets a
+       disjoint token subset at FULL d_model (routing work is split, not
+       replicated, across the model axis);
+    2. route + capacity-dispatch locally; all-to-all over 'data' to the
+       expert owners (EP axis);
+    3. expert matmuls with per-layer all-gathered full-F weights (weights
+       move — ~e_loc*3*D*F bytes — instead of the much larger token
+       buffers);
+    4. gate-weight on the owner, all-to-all back over 'data', combine,
+       reverse all-to-all over 'model'.
+    """
+    b, s_len, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    nd = mesh.shape["data"]
+    tp = mesh.shape["model"]
+    npod = mesh.shape.get("pod", 1)
+    dp_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    b_loc = b // (nd * npod)
+    t_loc = b_loc * s_len
+    t_m = t_loc // tp                 # tokens routed per model rank
+    e_loc = e // nd
+    cap = max(-(-int(t_m * k * cfg.capacity_factor / e) // 64) * 64, 64)
+
+    def body(x_loc, router, w_g, w_u, w_dn):
+        # x_loc: [b_loc, S, D/tp]; w_g/w_u: [e_loc, D, F/tp];
+        # w_dn: [e_loc, F/tp, D]; router replicated [D, E].
+        flat = x_loc.reshape(t_loc, d // tp)
+        tokens = jax.lax.all_to_all(flat, "model", 0, 1,
+                                    tiled=True)        # [t_m, D]
+        logits = tokens.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+        slot, tok, gates, keep = _local_dispatch_indices(
+            eidx, gate, e, cap, nd)
+        nslots = nd * e_loc * cap
+        send = jnp.zeros((nslots, d), x_loc.dtype).at[slot].set(
+            tokens[tok].astype(x_loc.dtype), mode="drop")
+        send_g = jnp.zeros((nslots,), jnp.float32).at[slot].set(
+            gates * keep, mode="drop")
+        recv = jax.lax.all_to_all(send.reshape(nd, e_loc * cap, d),
+                                  "data", 0, 0)
+        recv_g = jax.lax.all_to_all(send_g.reshape(nd, e_loc * cap),
+                                    "data", 0, 0)
+        disp = recv.reshape(nd, e_loc, cap, d).transpose(
+            1, 0, 2, 3).reshape(e_loc, nd * cap, d)
+        # full-F expert weights (FSDP-style per-layer regather over model)
+        w_g_full = jax.lax.all_gather(w_g, "model", axis=2, tiled=True)
+        w_u_full = jax.lax.all_gather(w_u, "model", axis=2, tiled=True)
+        w_dn_full = jax.lax.all_gather(w_dn, "model", axis=1, tiled=True)
+        g = jnp.einsum("ecd,edf->ecf", disp, w_g_full.astype(disp.dtype))
+        u = jnp.einsum("ecd,edf->ecf", disp, w_u_full.astype(disp.dtype))
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", h, w_dn_full.astype(h.dtype))
+        gflat = recv_g.reshape(nd, e_loc, cap).transpose(1, 0, 2)
+        out = out * gflat.reshape(e_loc, nd * cap, 1).astype(out.dtype)
+        back = out.reshape(e_loc, nd, cap, d).transpose(
+            1, 0, 2, 3).reshape(nd, e_loc * cap, d)
+        mine = jax.lax.all_to_all(back, "data", 0, 0).reshape(nslots, d)
+        contrib = mine[jnp.minimum(slot, nslots - 1)] \
+            * keep[:, None].astype(mine.dtype)
+        y = jnp.zeros((t_m, d), jnp.float32).at[tok].add(
+            contrib.astype(jnp.float32))
+        # reverse token-split: [t_m, D] -> [t_loc, D/tp]
+        y = jax.lax.all_to_all(y.astype(x_loc.dtype), "model", 1, 0,
+                               tiled=True)
+        return y.reshape(b_loc, s_len, d // tp)
+
+    P_ = meshlib.P
+    xspec = P_(dp_axes, None, "model")
+    y = shard_map_call(
+        body, mesh,
+        in_specs=(xspec, P_(None, None), P_("data", None, "model"),
+                  P_("data", None, "model"), P_("data", "model", None)),
+        out_specs=xspec,
+        args=(shard(x, "act_batch", "act_seq", "act_embed"),
+              p["router"], p["w_gate"], p["w_up"], p["w_down"]))
+
+    if cfg.num_shared_experts:
+        y = y + layers.apply_mlp(p["shared"], x)
+    return y
+
+
+def shard_map_call(fn, mesh, *, in_specs, out_specs, args):
+    try:
+        sm = jax.shard_map
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_vma=False)(*args)

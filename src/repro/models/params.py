@@ -1,0 +1,67 @@
+"""Parameter specification trees: one source of truth for shapes, logical
+sharding axes, and initializers.
+
+Every model builds a nested dict of ParamSpec. From it we derive:
+  * materialized parameters (init_params) — for real runs/tests;
+  * jax.ShapeDtypeStruct trees (param_shapes) — for the dry-run (no alloc);
+  * logical-axis trees (param_axes) — mapped to NamedShardings by
+    repro.launch.mesh.logical_to_sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple              # logical axis name (or None) per dim
+    init: str = "normal"     # 'normal' | 'zeros' | 'ones'
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=_is_spec)
+
+
+def init_params(specs, key, dtype=jnp.float32):
+    """Materialize parameters (deterministic w.r.t. tree structure)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    outs = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            outs.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            outs.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(
+                max(fan_in, 1))
+            outs.append(scale * jax.random.normal(k, spec.shape, dtype))
+    return jax.tree.unflatten(treedef, outs)
+
+
+def param_shapes(specs, dtype=jnp.bfloat16):
+    return map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def param_axes(specs):
+    return map_specs(lambda s: s.axes, specs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

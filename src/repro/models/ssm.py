@@ -1,0 +1,169 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked, pure JAX.
+
+Training/prefill use the chunked SSD algorithm (intra-chunk quadratic term
++ inter-chunk state carried by lax.scan); decode is the O(1) recurrent
+update h' = exp(dt·A)·h + dt·B⊗x. Includes the depthwise causal conv on
+(x, B, C), per-head dt with softplus, D skip, and gated RMSNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import mesh as meshlib
+from .params import ParamSpec
+from .layers import norm_spec, rms_norm
+
+shard = meshlib.shard
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def ssm_specs(cfg):
+    d = cfg.d_model
+    d_inner, nheads, n = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    fused = 2 * d_inner + 2 * n + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, fused), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nheads,), (None,), init="zeros"),
+        "d_skip": ParamSpec((nheads,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nheads,), (None,), init="zeros"),
+        "norm": norm_spec(d_inner),
+        "out_proj": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split(cfg, fused):
+    d_inner, nheads, n = ssm_dims(cfg)
+    z, xc, b_, c_, dt = jnp.split(
+        fused, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xc, b_, c_, dt
+
+
+def _conv(p, u, state=None):
+    """Depthwise causal conv (kernel k). u: [B, L, C].
+
+    state: [B, k-1, C] previous inputs (decode); returns (y, new_state).
+    """
+    k = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    y = sum(full[:, i:i + u.shape[1], :] * p["conv_w"][i].astype(u.dtype)
+            for i in range(k))
+    y = jax.nn.silu(y + p["conv_b"].astype(u.dtype))
+    new_state = full[:, -(k - 1):, :]
+    return y, new_state
+
+
+def ssd_chunked(xh, dt, a, b_, c_, *, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: [B, L, H, P]; dt: [B, L, H] (post-softplus); a: [H] (negative);
+    b_/c_: [B, L, N]. Returns (y [B,L,H,P], h_final [B,H,N,P]).
+    """
+    bsz, l, h, p = xh.shape
+    n = b_.shape[-1]
+    if l % chunk:
+        chunk = l
+    nc = l // chunk
+
+    da = dt * a  # [B, L, H] decay exponents (negative)
+    xdt = xh * dt[..., None]
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    xc = to_chunks(xdt)          # [nc, B, c, H, P]
+    dac = to_chunks(da)          # [nc, B, c, H]
+    bc = to_chunks(b_)           # [nc, B, c, N]
+    cc = to_chunks(c_)           # [nc, B, c, N]
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]  # causal within chunk
+
+    def body(hprev, xs):
+        xb, dab, bb, cb = xs
+        cum = jnp.cumsum(dab, axis=1)                       # [B, c, H]
+        total = cum[:, -1]                                  # [B, H]
+        # intra-chunk
+        sim = jnp.einsum("bin,bjn->bij", cb.astype(jnp.float32),
+                         bb.astype(jnp.float32))            # [B, c, c]
+        # mask BEFORE exp: future (i<j) exponents are positive and would
+        # overflow to inf, poisoning gradients through the where.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # [B, c, c, H]
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        dec = jnp.exp(jnp.where(tri[None, :, :, None], diff, 0.0))
+        dec = jnp.where(tri[None, :, :, None], dec, 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", sim, dec,
+                             xb.astype(jnp.float32))
+        # inter-chunk (incoming state)
+        cexp = cb.astype(jnp.float32)[:, :, None, :] \
+            * jnp.exp(cum)[..., None]                       # [B, c, H, N]
+        y_inter = jnp.einsum("bchn,bhnp->bchp", cexp, hprev)
+        # state update
+        bexp = bb.astype(jnp.float32)[:, :, None, :] \
+            * jnp.exp(total[:, None, :] - cum)[..., None]   # [B, c, H, N]
+        h_new = jnp.exp(total)[..., None, None] * hprev + jnp.einsum(
+            "bchn,bchp->bhnp", bexp, xb.astype(jnp.float32))
+        return h_new, (y_intra + y_inter)
+
+    h_fin, ys = jax.lax.scan(body, h0, (xc, dac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, p)
+    return y, h_fin
+
+
+def apply_ssm(p, x, cfg, *, kind, cache=None, chunk: int = 256):
+    """Mamba2 block. cache (decode): {'h': [B,H,N,P], 'conv': [B,k-1,C]}."""
+    bsz, l, _ = x.shape
+    d_inner, nheads, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    fused = x @ p["in_proj"].astype(x.dtype)
+    fused = shard(fused, "act_batch", "act_seq", "act_mlp")
+    z, xbc_in, b_in, c_in, dt_raw = _split(cfg, fused)
+    conv_in = jnp.concatenate([xbc_in, b_in, c_in], axis=-1)
+    conv_out, conv_state = _conv(
+        p, conv_in, None if kind != "decode" else cache["conv"])
+    xc = conv_out[..., :d_inner]
+    b_ = conv_out[..., d_inner:d_inner + n]
+    c_ = conv_out[..., d_inner + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B, L, H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [H]
+    xh = xc.reshape(bsz, l, nheads, hd)
+
+    if kind == "decode":
+        hprev = cache["h"]
+        daexp = jnp.exp(dt[:, 0] * a)                          # [B, H]
+        h_new = daexp[..., None, None] * hprev + jnp.einsum(
+            "bn,bhp->bhnp", b_[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None])
+        y = jnp.einsum("bn,bhnp->bhp", c_[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]                                         # [B, 1, H, P]
+        new_cache = {"h": h_new, "conv": conv_state}
+    else:
+        y, h_fin = ssd_chunked(xh, dt, a, b_, c_, chunk=chunk)
+        new_cache = ({"h": h_fin, "conv": conv_state}
+                     if kind == "prefill" else None)
+
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, l, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), new_cache

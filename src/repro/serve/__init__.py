@@ -1,0 +1,2 @@
+from .engine import ServeEngine, ServeStats
+__all__ = ["ServeEngine", "ServeStats"]

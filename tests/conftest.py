@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests must see ONE device (the dry-run alone uses 512 fake devices, via
+# subprocess). Distributed tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("repro", max_examples=15, deadline=None)
+settings.load_profile("repro")

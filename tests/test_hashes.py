@@ -1,0 +1,61 @@
+"""Hash primitives: jnp/np bit-exact agreement + ranking properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import hashes_np, signatures as sig
+
+u32s = st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=50)
+
+
+@given(u32s, u32s)
+def test_hash_pair_np_vs_jnp(a, b):
+    n = min(len(a), len(b))
+    a, b = np.array(a[:n], np.int32), np.array(b[:n], np.int32)
+    jhi, jlo = sig.hash_pair(jnp.asarray(a), jnp.asarray(b))
+    nhi, nlo = hashes_np.hash_pair(a, b)
+    assert np.array_equal(np.asarray(jhi), nhi)
+    assert np.array_equal(np.asarray(jlo), nlo)
+
+
+@given(u32s, u32s, u32s)
+def test_hash_triple_np_vs_jnp(a, b, c):
+    n = min(len(a), len(b), len(c))
+    arrs = [np.array(x[:n], np.int32) for x in (a, b, c)]
+    jhi, jlo = sig.hash_triple(*[jnp.asarray(x) for x in arrs])
+    nhi, nlo = hashes_np.hash_triple(*arrs)
+    assert np.array_equal(np.asarray(jhi), nhi)
+    assert np.array_equal(np.asarray(jlo), nlo)
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60))
+def test_dense_rank_ints(xs):
+    xs = np.array(xs, np.int32)
+    pid, count = sig.dense_rank_ints(jnp.asarray(xs))
+    pid = np.asarray(pid)
+    assert int(count) == len(set(xs.tolist()))
+    for i in range(len(xs)):
+        for j in range(len(xs)):
+            assert (pid[i] == pid[j]) == (xs[i] == xs[j])
+    assert pid.min() == 0 and pid.max() == int(count) - 1
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=40),
+       st.lists(st.integers(0, 3), min_size=1, max_size=40))
+def test_dense_rank_pairs(hi, lo):
+    n = min(len(hi), len(lo))
+    hi = np.array(hi[:n], np.uint32)
+    lo = np.array(lo[:n], np.uint32)
+    pid, count = sig.dense_rank_pairs(jnp.asarray(hi), jnp.asarray(lo))
+    pid = np.asarray(pid)
+    pairs = list(zip(hi.tolist(), lo.tolist()))
+    assert int(count) == len(set(pairs))
+    for i in range(n):
+        for j in range(n):
+            assert (pid[i] == pid[j]) == (pairs[i] == pairs[j])
+
+
+def test_fmix32_bijective_sample():
+    xs = np.arange(100000, dtype=np.uint32)
+    ys = hashes_np.fmix32(xs)
+    assert len(np.unique(ys)) == len(xs)  # injective on the sample

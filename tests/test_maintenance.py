@@ -1,0 +1,107 @@
+"""Maintenance (Algorithms 2-4 + deletions) vs full rebuild."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import BisimMaintainer, build_bisim, same_partition
+from repro.graph import generators as gen
+from repro.graph.storage import paper_example_graph
+
+
+def _check(m: BisimMaintainer):
+    ref = build_bisim(m.graph, m.k, early_stop=False)
+    for j in range(m.k + 1):
+        assert same_partition(m.pids[j], ref.pids[j]), j
+
+
+def test_paper_case_no_propagation():
+    """§4.2 example 1: edge (2,l,7) into fresh leaf changes nothing."""
+    m = BisimMaintainer(paper_example_graph(), 2)
+    new = m.add_node(1)
+    rep = m.add_edge(1, 0, new)
+    assert rep.nodes_changed == [0, 0]
+    _check(m)
+
+
+def test_paper_case_with_propagation():
+    """§4.2 example 2: edge (6,l,5) changes 6 at level 1, then {2,6} at 2."""
+    m = BisimMaintainer(paper_example_graph(), 2)
+    rep = m.add_edge(5, 0, 4)
+    assert rep.nodes_changed == [1, 2]
+    _check(m)
+    # Table 5: nodes 1 and 2 merge at k=2
+    assert m.pids[2][0] == m.pids[2][1]
+
+
+def test_add_isolated_nodes_bulk():
+    m = BisimMaintainer(gen.random_graph(40, 100, 3, 2, 0), 4)
+    ids = m.add_nodes([0, 1, 2, 7, 7])
+    assert len(ids) == 5
+    _check(m)
+    # two fresh label-7 nodes are bisimilar at every level
+    for j in range(5):
+        assert m.pids[j][ids[3]] == m.pids[j][ids[4]]
+
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["add_edge", "del_edge", "add_nodes",
+                               "add_edges"]),
+              st.integers(0, 10**6)),
+    min_size=1, max_size=5)
+
+
+@given(st.integers(0, 100), ops, st.integers(1, 5))
+def test_random_updates_match_rebuild(seed, op_list, k):
+    g = gen.random_graph(30, 80, 3, 2, seed=seed)
+    m = BisimMaintainer(g, k)
+    rng = np.random.default_rng(seed)
+    for op, _ in op_list:
+        n = m.graph.num_nodes
+        if op == "add_edge":
+            m.add_edge(int(rng.integers(0, n)), int(rng.integers(0, 2)),
+                       int(rng.integers(0, n)))
+        elif op == "del_edge" and m.graph.num_edges:
+            i = int(rng.integers(0, m.graph.num_edges))
+            m.delete_edges(m.graph.src[i], m.graph.elabel[i], m.graph.dst[i])
+        elif op == "add_nodes":
+            m.add_nodes(rng.integers(0, 3, 2).tolist())
+        else:
+            e = rng.integers(0, n, (3, 2))
+            m.add_edges(e[:, 0], rng.integers(0, 2, 3), e[:, 1])
+    _check(m)
+
+
+def test_delete_node():
+    m = BisimMaintainer(gen.random_graph(25, 60, 2, 2, 5), 3)
+    m.delete_node(7)
+    assert not ((m.graph.src == 7) | (m.graph.dst == 7)).any()
+    _check(m)
+
+
+def test_rebuild_heuristic_triggers():
+    """Dworst: adding a y edge to a complete graph floods the frontier ->
+    the §4.2 switch-back heuristic must fire."""
+    g = gen.complete_graph(12)
+    m = BisimMaintainer(g, 4, rebuild_threshold=0.5)
+    n = g.num_nodes
+    rep = m.add_edges([0], [1], [5])
+    rep2 = m.add_edges(list(range(n)), [1] * n, [(i + 1) % n
+                                                 for i in range(n)])
+    assert rep2.rebuilt or max(rep2.nodes_checked, default=0) <= n
+    _check(m)
+
+
+def test_change_k():
+    g = gen.random_graph(40, 120, 3, 2, seed=2)
+    m = BisimMaintainer(g, 3)
+    m.change_k(5)
+    _check(m)
+    m.change_k(2)
+    _check(m)
+    m.add_edge(0, 0, 1)
+    _check(m)
+
+
+def test_maintenance_requires_set_semantics():
+    with pytest.raises(ValueError):
+        BisimMaintainer(paper_example_graph(), 2, mode="multiset")
