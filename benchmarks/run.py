@@ -1,10 +1,14 @@
 """Benchmark harness — one module per paper table/figure (see DESIGN §6).
 
-Prints ``name,us_per_call,derived`` CSV. ``--scale N`` grows the datasets.
+Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
+``BENCH_<name>.json`` per benchmark at the repo root (so the perf
+trajectory is trackable across PRs). ``--scale N`` grows the datasets.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -23,11 +27,33 @@ ALL = [
 ]
 
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_json(name: str, rows, scale: int, seconds: float,
+               root: str = _REPO_ROOT) -> str:
+    """Emit BENCH_<name>.json: {name, scale, seconds, rows:[{name,us,meta}]}."""
+    path = os.path.join(root, f"BENCH_{name}.json")
+    payload = {
+        "name": name,
+        "scale": scale,
+        "seconds": seconds,
+        "rows": [{"name": rname, "us": round(float(us), 1), "meta": derived}
+                 for rname, us, derived in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark name")
     ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<name>.json files")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -35,9 +61,14 @@ def main() -> None:
     for name, fn, scalable in ALL:
         if args.only and args.only not in name:
             continue
+        t0 = time.perf_counter()
         rows = fn(scale=args.scale) if scalable else fn()
+        dt = time.perf_counter() - t0
         for rname, us, derived in rows:
             print(f"{name}/{rname},{us:.1f},{derived}")
+        if not args.no_json:
+            path = write_json(name, rows, args.scale, dt)
+            print(f"# wrote {path}", file=sys.stderr)
     print(f"# total benchmark wall time: "
           f"{time.perf_counter() - t_start:.1f}s", file=sys.stderr)
 

@@ -1,0 +1,21 @@
+"""Small jax version-compat shims shared across the package."""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(fn, **kw):
+    """shard_map with the replication-check kwarg across jax versions
+    (`check_vma` since jax 0.6, `check_rep` before)."""
+    try:
+        return _shard_map(fn, **kw)
+    except TypeError:
+        if "check_vma" not in kw:
+            raise
+        kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(fn, **kw)

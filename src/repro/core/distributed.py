@@ -36,10 +36,7 @@ from repro.graph.storage import Graph
 from . import signatures as sig
 from .partition import BisimResult, IterationStats
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass

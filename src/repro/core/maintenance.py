@@ -5,6 +5,17 @@ pid history pId_0..pId_k (Table 3), both edge sort orders are available
 (CSR by src = E_tst, CSR by dst = E_tts), and the signature store S built
 during construction is kept and updated.
 
+The store is the array-backed ``SigStore`` (sig_store.py): per level one
+sorted u64 key column (fused ``hi << 32 | lo`` signature hash; level 0 the
+raw node label) and a parallel int64 pid column — the paper's sorted
+signature file S, shared verbatim with `build_bisim(with_store=True)`.
+Every per-level step is a batch array operation: the frontier's signatures
+come from the vectorized `node_signatures_batch` (CSR gather + segment
+combine), signature -> pid resolution is one bulk
+`SigStore.get_or_assign` (searchsorted + sorted merge of the novel run),
+and parent-frontier propagation is a vectorized gather over the in-CSR.
+No per-node Python loops remain on the propagation path.
+
 The STXXL priority queue of (iteration, nId) pairs becomes a per-level
 frontier set: dequeueing "all pairs with the smallest j" (line 11, Alg. 4)
 is exactly processing frontier[j] level by level; "propagate changes to
@@ -23,6 +34,7 @@ import numpy as np
 from repro.graph.storage import Graph
 from . import hashes_np
 from .partition import BisimResult, build_bisim
+from .sig_store import SigStore, fuse_key, label_key
 
 
 @dataclasses.dataclass
@@ -32,6 +44,24 @@ class MaintenanceReport:
     nodes_changed: list          # per level
     partitions_touched: list     # per level
     rebuilt: bool = False
+
+
+def _csr_gather(offsets: np.ndarray, nodes: np.ndarray):
+    """Edge indices of all CSR rows in `nodes`, concatenated.
+
+    Returns (idx int64 [sum deg], seg int64 [sum deg]) where seg[i] is the
+    position in `nodes` that idx[i]'s edge belongs to.
+    """
+    starts = offsets[nodes]
+    cnts = (offsets[nodes + 1] - starts).astype(np.int64)
+    total = int(cnts.sum())
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    seg = np.repeat(np.arange(nodes.shape[0], dtype=np.int64), cnts)
+    ends = np.cumsum(cnts)
+    idx = np.arange(total, dtype=np.int64) + np.repeat(
+        starts.astype(np.int64) - (ends - cnts), cnts)
+    return idx, seg
 
 
 class BisimMaintainer:
@@ -60,7 +90,7 @@ class BisimMaintainer:
         # pid history as mutable int64 (new pids can exceed int32 eventually)
         self.pids = [np.array(res.pids[j], dtype=np.int64)
                      for j in range(self.k + 1)]
-        self.stores = res.stores          # [0]: label->pid, [j]: (hi,lo)->pid
+        self.stores = res.stores     # list[SigStore]; [0] keyed by label
         self.next_pid = list(res.next_pid)
         self._refresh_indexes()
 
@@ -86,32 +116,27 @@ class BisimMaintainer:
 
     def add_nodes(self, labels: Iterable[int]) -> list:
         """Algorithm 3: bulk insert isolated nodes (merge-join on labels)."""
-        labels = list(labels)
+        labels = np.asarray(list(labels), dtype=np.int32)
         new_ids = list(range(self.graph.num_nodes,
-                             self.graph.num_nodes + len(labels)))
-        self.graph = self.graph.with_nodes_added(np.array(labels, np.int32))
+                             self.graph.num_nodes + labels.shape[0]))
+        self.graph = self.graph.with_nodes_added(labels)
+        grow = np.zeros(labels.shape[0], dtype=np.int64)
         for j in range(self.k + 1):
-            self.pids[j] = np.concatenate(
-                [self.pids[j], np.zeros(len(labels), dtype=np.int64)])
-        for nid, lab in zip(new_ids, labels):
-            if lab in self.stores[0]:
-                p0 = self.stores[0][lab]
-            else:
-                p0 = self.next_pid[0]
-                self.next_pid[0] += 1
-                self.stores[0][lab] = p0
-            self.pids[0][nid] = p0
-            # sig_j of an isolated node is (pId_0, {}) for every j >= 1
-            for j in range(1, self.k + 1):
-                key = hashes_np.node_signature(
-                    p0, np.empty(0, np.int32), np.empty(0, np.int32))
-                if key in self.stores[j]:
-                    pj = self.stores[j][key]
-                else:
-                    pj = self.next_pid[j]
-                    self.next_pid[j] += 1
-                    self.stores[j][key] = pj
-                self.pids[j][nid] = pj
+            self.pids[j] = np.concatenate([self.pids[j], grow])
+        # level 0: one bulk resolve of the label keys (merge-join on labels)
+        p0, self.next_pid[0] = self.stores[0].get_or_assign(
+            label_key(labels), self.next_pid[0])
+        self.pids[0][new_ids] = p0
+        # sig_j of an isolated node is (pId_0, {}) for every j >= 1: the
+        # empty-set combine is the identity (0, 0), so its hash only
+        # depends on p0 — one vectorized hash_triple per level.
+        zero = np.zeros(labels.shape[0], np.uint32)
+        hi, lo = hashes_np.hash_triple(zero, zero, p0)
+        keys = fuse_key(hi, lo)
+        for j in range(1, self.k + 1):
+            pj, self.next_pid[j] = self.stores[j].get_or_assign(
+                keys, self.next_pid[j])
+            self.pids[j][new_ids] = pj
         self._refresh_indexes()
         return new_ids
 
@@ -154,8 +179,8 @@ class BisimMaintainer:
         n = self.graph.num_nodes
         report = MaintenanceReport([], [], [])
         pid0 = self.pids[0]
-        frontier = np.unique(frontier0)
-        always = np.unique(frontier0)  # (j, s) enqueued for every j (line 7-8)
+        frontier = np.unique(frontier0).astype(np.int64)
+        always = frontier.copy()  # (j, s) enqueued for every j (line 7-8)
         for j in range(1, self.k + 1):
             if frontier.size == 0:
                 report.nodes_checked.append(0)
@@ -167,37 +192,29 @@ class BisimMaintainer:
                 self._build()
                 report.rebuilt = True
                 return report
+            # gather only the frontier's out-edges (cost O(frontier edges),
+            # not O(|E|)) and resolve their targets' pId_{j-1}
             pid_prev = self.pids[j - 1]
-            pid_tgt = pid_prev[self.graph.dst]
-            hi, lo = hashes_np.node_signatures_batch(
-                pid0, self.out_off, self.graph.elabel, pid_tgt, frontier)
-            changed = []
-            store = self.stores[j]
-            for u, h, l in zip(frontier.tolist(), hi.tolist(), lo.tolist()):
-                key = (h, l)
-                if key in store:
-                    pj = store[key]
-                else:
-                    pj = self.next_pid[j]
-                    self.next_pid[j] += 1
-                    store[key] = pj
-                if self.pids[j][u] != pj:
-                    changed.append((u, self.pids[j][u], pj))
-                    self.pids[j][u] = pj
+            idx, seg = _csr_gather(self.out_off, frontier)
+            hi, lo = hashes_np.signatures_from_edges(
+                pid0[frontier], seg, self.graph.elabel[idx],
+                pid_prev[self.graph.dst[idx]], frontier.size)
+            # one bulk resolve of the whole frontier against S_j
+            pj, self.next_pid[j] = self.stores[j].get_or_assign(
+                fuse_key(hi, lo), self.next_pid[j])
+            old = self.pids[j][frontier]
+            changed_mask = old != pj
+            self.pids[j][frontier] = pj
+            changed = frontier[changed_mask]
             report.nodes_checked.append(int(frontier.size))
-            report.nodes_changed.append(len(changed))
+            report.nodes_changed.append(int(changed.size))
             report.partitions_touched.append(
-                len({old for (_, old, _) in changed}
-                    | {new for (_, _, new) in changed}))
+                int(np.union1d(old[changed_mask], pj[changed_mask]).size))
             # propagate to parents of changed nodes (line 20; uses E_tts)
-            if changed and j < self.k:
-                ch = np.array([u for (u, _, _) in changed], dtype=np.int64)
-                parents = []
-                for u in ch.tolist():
-                    s, e = self.in_off[u], self.in_off[u + 1]
-                    parents.append(self.graph.src[self.in_ord[s:e]])
-                parents = (np.unique(np.concatenate(parents))
-                           if parents else np.empty(0, np.int64))
+            if changed.size and j < self.k:
+                idx, _ = _csr_gather(self.in_off, changed)
+                parents = np.unique(
+                    self.graph.src[self.in_ord[idx]]).astype(np.int64)
                 frontier = np.union1d(parents, always)
             else:
                 frontier = always.copy()
@@ -225,15 +242,11 @@ class BisimMaintainer:
             hi, lo = sig.signature_hashes(
                 pid0, src, dst, elab, pid_prev,
                 num_nodes=self.graph.num_nodes, mode=self.mode)
-            from .signatures import dense_rank_pairs
-            pid_new, count = dense_rank_pairs(hi, lo)
-            store = {}
-            for h, l, p in zip(np.asarray(hi).tolist(),
-                               np.asarray(lo).tolist(),
-                               np.asarray(pid_new).tolist()):
-                store[(h, l)] = p
-            self.stores.append(store)
+            pid_new, count = sig.dense_rank_pairs(hi, lo)
+            pid_np = np.asarray(pid_new)
+            self.stores.append(SigStore.from_hash_pairs(
+                np.asarray(hi), np.asarray(lo), pid_np))
             self.next_pid.append(int(count))
-            self.pids.append(np.asarray(pid_new).astype(np.int64))
+            self.pids.append(pid_np.astype(np.int64))
             pid_prev = pid_new
         self.k = new_k

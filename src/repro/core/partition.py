@@ -6,9 +6,21 @@ early-stop condition of §3.2/App. A.3 — two consecutive iterations with an
 equal number of partition blocks mean the *full* bisimulation partition has
 been reached — is applied by default.
 
-The returned ``BisimResult`` keeps the full pid history (the maintenance
-N_t schema, Table 3) plus, optionally, the signature store S contents needed
-by the maintenance algorithms.
+The whole k-iteration loop is device-resident: one jitted signature->rank
+step (`_bisim_step`) is reused across iterations, the per-level pid arrays
+and signature hash pairs stay on device, and the only host traffic per
+iteration is the scalar partition count (needed for the early-stop test and
+the Table-7 stats). The full pid history — and, with ``with_store=True``,
+the per-level (hi, lo) signature arrays — are fetched in a single transfer
+after the loop. On accelerators the previous-iteration pid buffer is
+donated back to XLA each step, so the loop runs with a constant number of
+N-sized buffers.
+
+The signature store S is extracted from the already-computed (hi, lo)
+arrays with zero Python loops: each level's store is an array-backed sorted
+``SigStore`` (see sig_store.py) — the paper's sorted signature file S —
+keyed by the fused 64-bit signature hash (level 0: the node label) and
+shared as-is with the maintenance algorithms (§4).
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import numpy as np
 
 from repro.graph.storage import Graph
 from . import signatures as sig
+from .sig_store import SigStore
 
 
 @dataclasses.dataclass
@@ -42,8 +55,9 @@ class BisimResult:
     stats: list                     # list[IterationStats]
     converged_at: Optional[int]     # iteration where counts stabilized, or None
     k_requested: int
-    # Signature store S per level: dict[(hi, lo) -> pid] — only when
-    # with_store=True (needed by maintenance, §4).
+    # Signature store S per level: SigStore (sorted u64-key -> pid arrays);
+    # level 0 keyed by node label — only when with_store=True (needed by
+    # maintenance, §4).
     stores: Optional[list] = None
     next_pid: Optional[list] = None
 
@@ -61,9 +75,37 @@ def _iteration0(node_labels: jax.Array):
     return sig.dense_rank_ints(node_labels)
 
 
-@jax.jit
-def _rank(hi, lo):
-    return sig.dense_rank_pairs(hi, lo)
+def _bisim_step_impl(pid0, src, dst, elabel, pid_prev, *, num_nodes, mode,
+                     use_kernel):
+    """One fused iteration: sig_j hashes + dense rank, single XLA program.
+
+    `pid_prev` is returned as an (aliased) output so its buffer survives
+    donation — the caller re-binds its history entry to the passthrough.
+    """
+    hi, lo = sig.signature_hashes(
+        pid0, src, dst, elabel, pid_prev, num_nodes=num_nodes, mode=mode,
+        use_kernel=use_kernel)
+    pid_new, count = sig.dense_rank_pairs(hi, lo)
+    return pid_prev, pid_new, count, hi, lo
+
+
+_bisim_step_jit = None
+
+
+def _bisim_step(*args, **kwargs):
+    """Jit `_bisim_step_impl` lazily: donating pid_prev lets XLA reuse the
+    previous iteration's pid buffer in place, but CPU ignores donation (and
+    warns), and querying the backend at import time would force JAX
+    initialization as an import side effect — so the decision is made at
+    the first call, when the backend is already up."""
+    global _bisim_step_jit
+    if _bisim_step_jit is None:
+        donate = () if jax.default_backend() == "cpu" else (4,)
+        _bisim_step_jit = jax.jit(
+            _bisim_step_impl,
+            static_argnames=("num_nodes", "mode", "use_kernel"),
+            donate_argnums=donate)
+    return _bisim_step_jit(*args, **kwargs)
 
 
 def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
@@ -83,51 +125,57 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
 
     t0 = time.perf_counter()
     pid0, count0 = _iteration0(node_labels)
-    pid0.block_until_ready()
-    stats = [IterationStats(0, int(count0), time.perf_counter() - t0,
+    c0 = int(count0)  # host sync point for the timing below
+    stats = [IterationStats(0, c0, time.perf_counter() - t0,
                             bytes_sorted=4 * n, bytes_scanned=4 * n)]
-    counts = [int(count0)]
-    history = [np.asarray(pid0)]
-    stores, next_pid = None, None
-    if with_store:
-        stores = [dict()]  # level 0 keyed by node label
-        for lab, p in zip(graph.node_labels.tolist(), history[0].tolist()):
-            stores[0][lab] = p
-        next_pid = [int(count0)]
+    counts = [c0]
+    history = [pid0]          # device-resident pid history
+    sig_pairs = []            # device-resident (hi, lo) per level, if stored
 
-    pid_prev = pid0
+    # First step consumes a copy so donation never consumes pid0, which is
+    # also history[0] and the non-donated first argument.
+    pid_prev = pid0 + jnp.int32(0)
     converged_at = None
     for j in range(1, k + 1):
         t0 = time.perf_counter()
-        hi, lo = sig.signature_hashes(
+        prev_alias, pid_new, count, hi, lo = _bisim_step(
             pid0, src, dst, elabel, pid_prev, num_nodes=n, mode=mode,
             use_kernel=use_kernel)
-        pid_new, count = _rank(hi, lo)
-        pid_new.block_until_ready()
+        c = int(count)  # the only per-iteration host transfer (a scalar)
         dt = time.perf_counter() - t0
+        if j > 1:
+            history[-1] = prev_alias
         # Table-7-style accounting: sorted modes sort E (3 or 2 keys) and N,
         # multiset only scans E and sorts N (for ranking).
         key_bytes = {"sorted": 12, "dedup_hash": 12, "multiset": 0}[mode]
         stats.append(IterationStats(
-            j, int(count), dt,
+            j, c, dt,
             bytes_sorted=key_bytes * esize + 8 * n,
             bytes_scanned=12 * esize + 8 * n))
-        counts.append(int(count))
-        history.append(np.asarray(pid_new))
+        counts.append(c)
+        history.append(pid_new)
         if with_store:
-            s = {}
-            for h, l, p in zip(np.asarray(hi).tolist(), np.asarray(lo).tolist(),
-                               history[-1].tolist()):
-                s[(h, l)] = p
-            stores.append(s)
-            next_pid.append(int(count))
+            sig_pairs.append((hi, lo))
         if early_stop and counts[-1] == counts[-2]:
             converged_at = j
             break
         pid_prev = pid_new
 
+    # Single bulk host transfer of the pid history (+ signatures if stored).
+    pids_host, sig_host = jax.device_get((history, sig_pairs))
+    pids = np.stack([np.asarray(p) for p in pids_host])
+
+    stores, next_pid = None, None
+    if with_store:
+        # Store extraction is pure array work on the already-computed
+        # hashes: level 0 keyed by node label, level j by sig_j hash.
+        stores = [SigStore.from_labels(graph.node_labels, pids[0])]
+        for j, (h, l) in enumerate(sig_host, start=1):
+            stores.append(SigStore.from_hash_pairs(h, l, pids[j]))
+        next_pid = list(counts[: len(stores)])
+
     return BisimResult(
-        pids=np.stack(history), counts=counts, stats=stats,
+        pids=pids, counts=counts, stats=stats,
         converged_at=converged_at, k_requested=k, stores=stores,
         next_pid=next_pid)
 

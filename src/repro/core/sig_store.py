@@ -1,0 +1,154 @@
+"""Array-backed signature store S (paper §3.2, sorted-file implementation).
+
+The paper keeps S as a sorted file of (signature, pId) records; lookups and
+inserts are bulk sort/merge passes. The previous in-memory analogue was a
+Python dict per level — correct, but it forced every store interaction
+(construction extract, maintenance resolve) through a per-node Python loop.
+
+``SigStore`` is the array-native replacement: one sorted ``uint64`` key
+column (the fused ``hi << 32 | lo`` signature hash) plus a parallel
+``int64`` pid column.  The store operations are exactly the paper's bulk
+ones:
+
+  * lookup  — ``np.searchsorted`` of the (sorted) probe keys against the
+              key column: the sort-merge join of F against S.
+  * insert  — sort + dedup the novel run, then a single merge with the
+              existing sorted run (``np.argsort`` of the concatenation is
+              O((n+m) log) but allocation-light; both runs already sorted).
+  * get_or_assign — the combined "resolve or create pId" step of
+              Algorithm 4 lines 13-17, over a whole frontier at once.
+
+Level 0 reuses the same store with ``key = uint64(node_label)`` (hi lane 0),
+so construction and maintenance share one schema for every level.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+_SHIFT = np.uint64(32)
+
+
+def fuse_key(hi, lo) -> np.ndarray:
+    """Fuse (hi, lo) u32 hash lanes into the store's sortable u64 key."""
+    hi = np.asarray(hi).astype(np.uint32, copy=False)
+    lo = np.asarray(lo).astype(np.uint32, copy=False)
+    return (hi.astype(_U64) << _SHIFT) | lo.astype(_U64)
+
+
+def label_key(labels) -> np.ndarray:
+    """Level-0 key: the raw node label in the lo lane (hi lane zero)."""
+    return np.asarray(labels).astype(np.uint32, copy=False).astype(_U64)
+
+
+class SigStore:
+    """Sorted (key u64, pid int64) columns; all ops are bulk array ops."""
+
+    __slots__ = ("keys", "pids")
+
+    def __init__(self, keys: np.ndarray, pids: np.ndarray, *,
+                 presorted: bool = False):
+        keys = np.asarray(keys, dtype=_U64)
+        pids = np.asarray(pids, dtype=np.int64)
+        if keys.shape != pids.shape:
+            raise ValueError("keys and pids must be parallel 1-D arrays")
+        if not presorted:
+            keys, first = np.unique(keys, return_index=True)
+            pids = pids[first]
+        self.keys = keys
+        self.pids = pids
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def empty(cls) -> "SigStore":
+        return cls(np.empty(0, _U64), np.empty(0, np.int64), presorted=True)
+
+    @classmethod
+    def from_hash_pairs(cls, hi, lo, pids) -> "SigStore":
+        """Build from per-node (hi, lo, pid) arrays; duplicates collapse
+        (all nodes with one signature share a pid by construction)."""
+        return cls(fuse_key(hi, lo), pids)
+
+    @classmethod
+    def from_labels(cls, labels, pids) -> "SigStore":
+        return cls(label_key(labels), pids)
+
+    # ------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return int(self.keys.shape[0])
+
+    def __contains__(self, key) -> bool:
+        k = _U64(key)
+        i = np.searchsorted(self.keys, k)
+        return bool(i < self.keys.shape[0] and self.keys[i] == k)
+
+    def lookup(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Bulk lookup. Returns (pids int64, found bool); missing -> -1."""
+        keys = np.asarray(keys, dtype=_U64)
+        idx = np.searchsorted(self.keys, keys)
+        idx_c = np.minimum(idx, max(len(self) - 1, 0))
+        found = (np.zeros(keys.shape, bool) if len(self) == 0
+                 else self.keys[idx_c] == keys)
+        out = np.where(found, self.pids[idx_c] if len(self) else -1, -1)
+        return out.astype(np.int64, copy=False), found
+
+    def get(self, key, default=None):
+        pid, found = self.lookup(np.asarray([key], dtype=_U64))
+        return int(pid[0]) if found[0] else default
+
+    # ------------------------------------------------------------- updates
+    def insert(self, keys, pids) -> None:
+        """Merge (keys, pids) into the store. Existing keys keep their pid
+        (the store is an injective signature -> pId map; re-inserting an
+        existing signature with a different pid would be a logic error)."""
+        keys = np.asarray(keys, dtype=_U64)
+        pids = np.asarray(pids, dtype=np.int64)
+        if keys.size == 0:
+            return
+        ukeys, first = np.unique(keys, return_index=True)
+        upids = pids[first]
+        _, found = self.lookup(ukeys)
+        novel = ~found
+        if not novel.any():
+            return
+        merged_keys = np.concatenate([self.keys, ukeys[novel]])
+        merged_pids = np.concatenate([self.pids, upids[novel]])
+        order = np.argsort(merged_keys, kind="stable")
+        self.keys = merged_keys[order]
+        self.pids = merged_pids[order]
+
+    def get_or_assign(self, keys, next_pid: int) -> tuple[np.ndarray, int]:
+        """Resolve every key to a pid, minting fresh pids for novel keys.
+
+        New pids are assigned in order of first occurrence in `keys`
+        (matching what a sequential dict walk over the frontier would do),
+        starting at `next_pid`. Returns (pids int64 [len(keys)], next_pid').
+        """
+        keys = np.asarray(keys, dtype=_U64)
+        out, found = self.lookup(keys)
+        if found.all():
+            return out, next_pid
+        miss = ~found
+        mkeys = keys[miss]
+        ukeys, first, inv = np.unique(mkeys, return_index=True,
+                                      return_inverse=True)
+        # rank unique novel keys by first appearance in the probe order
+        appearance = np.argsort(np.argsort(first, kind="stable"),
+                                kind="stable")
+        new_pids = np.int64(next_pid) + appearance
+        out[miss] = new_pids[inv]
+        merged_keys = np.concatenate([self.keys, ukeys])
+        merged_pids = np.concatenate([self.pids, new_pids])
+        order = np.argsort(merged_keys, kind="stable")
+        self.keys = merged_keys[order]
+        self.pids = merged_pids[order]
+        return out, next_pid + int(ukeys.shape[0])
+
+    # --------------------------------------------------------------- misc
+    def to_dict(self) -> dict:
+        """Materialize as {int key: int pid} (tests / debugging only)."""
+        return {int(k): int(p) for k, p in zip(self.keys.tolist(),
+                                               self.pids.tolist())}
+
+    def slice_copy(self) -> "SigStore":
+        return SigStore(self.keys.copy(), self.pids.copy(), presorted=True)

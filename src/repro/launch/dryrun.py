@@ -86,7 +86,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.perf_counter() - t0
 
     print(compiled.memory_analysis())   # proves it fits (per-device bytes)
-    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+    print({k: v for k, v in roofline.cost_analysis_dict(compiled).items()
            if k in ("flops", "bytes accessed")})  # FLOPs/bytes for §Roofline
     mem = roofline.memory_summary(compiled)
     rf = roofline.analyze(compiled, chips)
@@ -137,7 +137,7 @@ def lower_bisim_cell(*, multi_pod: bool, mode: str = "sorted",
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
     print(compiled.memory_analysis())
-    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+    print({k: v for k, v in roofline.cost_analysis_dict(compiled).items()
            if k in ("flops", "bytes accessed")})
     mem = roofline.memory_summary(compiled)
     rf = roofline.analyze(compiled, chips)

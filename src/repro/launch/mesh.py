@@ -21,11 +21,20 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where supported (jax >= 0.6;
+    earlier versions have no explicit-sharding axis types)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 # Weight axes ('embed' is the FSDP dim), then activation axes.

@@ -104,6 +104,15 @@ class Roofline:
         }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a dict across jax versions (jax < 0.6
+    returns a one-element list of dicts, newer versions a dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze(compiled, chips: int) -> Roofline:
     """Roofline terms from the while-aware HLO walk (hlo_stats). XLA's own
     cost_analysis counts loop bodies once (scan-blind); it is kept in the
@@ -111,7 +120,7 @@ def analyze(compiled, chips: int) -> Roofline:
     from . import hlo_stats
     text = compiled.as_text()
     st = hlo_stats.analyze_hlo(text)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     return Roofline(
         compute_s=st.flops / PEAK_FLOPS,
         memory_s=st.bytes / HBM_BW,

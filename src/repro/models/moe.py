@@ -231,9 +231,6 @@ def _apply_moe_a2a(p, x, cfg, mesh):
 
 
 def shard_map_call(fn, mesh, *, in_specs, out_specs, args):
-    try:
-        sm = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map as sm
-    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_vma=False)(*args)
+    from repro.compat import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)(*args)

@@ -48,7 +48,10 @@ def compressed_psum(x, axis: str):
     padded internally). Bytes on the wire: 2 * |x| int8 (+ scales) instead
     of 2 * |x| f32.
     """
-    d = jax.lax.axis_size(axis)
+    try:
+        d = jax.lax.axis_size(axis)  # jax >= 0.6
+    except AttributeError:
+        d = jax.lax.psum(1, axis)
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     pad = (-n) % d

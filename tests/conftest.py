@@ -6,8 +6,14 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
-from hypothesis import settings  # noqa: E402
-
-settings.register_profile("repro", max_examples=15, deadline=None)
-settings.load_profile("repro")
+# hypothesis is optional: property tests skip without it (via hypo_compat),
+# and the profile is only registered when it is installed.
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile("repro", max_examples=15, deadline=None)
+    settings.load_profile("repro")

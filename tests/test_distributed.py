@@ -113,8 +113,7 @@ def test_sharded_train_step_matches_single_device():
                  "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)))}
         s1 = make_train_step(m, OptConfig(), mesh=None, donate=False)
         p1, o1, met1 = s1(params, opt, batch)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = meshlib.make_mesh((4, 2), ("data", "model"))
         s2 = make_train_step(m, OptConfig(), mesh=mesh, donate=False)
         p2, o2, met2 = s2(params, opt, batch)
         assert abs(float(met1["loss"]) - float(met2["loss"])) < 1e-4
@@ -146,9 +145,7 @@ def test_moe_a2a_matches_dense_dispatch():
         y_dense = moe._apply_moe_dense(p, x, cfg)
         for shape_, names in [((2, 2), ("data", "model")),
                               ((2, 2, 2), ("pod", "data", "model"))]:
-            mesh = jax.make_mesh(
-                shape_, names,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(shape_))
+            mesh = meshlib.make_mesh(shape_, names)
             def f(p, x):
                 with meshlib.sharding_context(mesh, meshlib.DEFAULT_RULES):
                     return moe.apply_moe(p, x, cfg)

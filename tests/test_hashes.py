@@ -1,7 +1,7 @@
 """Hash primitives: jnp/np bit-exact agreement + ranking properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from hypo_compat import given, strategies as st
 
 from repro.core import hashes_np, signatures as sig
 

@@ -1,7 +1,7 @@
 """Maintenance (Algorithms 2-4 + deletions) vs full rebuild."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypo_compat import given, strategies as st
 
 from repro.core import BisimMaintainer, build_bisim, same_partition
 from repro.graph import generators as gen

@@ -1,7 +1,7 @@
 """Build_Bisim (Algorithm 1) correctness: paper examples + oracle equality."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, strategies as st
 
 from repro.core import build_bisim, oracle_pids, refines, same_partition
 from repro.core.partition import partition_blocks

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypo_compat import given, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_smoke_config
@@ -86,8 +86,12 @@ def test_compressed_psum_multidevice():
                         jnp.float32)
         def f(x):
             return compressed_psum(x, "d")
-        y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"),
-                                  out_specs=P("d")))(x)
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+        y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d"),
+                              out_specs=P("d")))(x)
         exact = jnp.mean(x, axis=0, keepdims=True).repeat(4, 0)
         err = float(jnp.abs(y - exact).max())
         scale = float(jnp.abs(x).max()) / 127

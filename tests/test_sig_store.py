@@ -1,0 +1,168 @@
+"""Array-backed SigStore: dict-store equivalence, vectorized batch paths,
+and construction/maintenance store sharing (ISSUE 1 tentpole coverage)."""
+import numpy as np
+import pytest
+
+from repro.core import (BisimMaintainer, SigStore, build_bisim, fuse_key,
+                        hashes_np, label_key, same_partition)
+from repro.graph import generators as gen
+from repro.graph.storage import paper_example_graph
+from repro.kernels import ops
+
+
+# ------------------------------------------------------------- store vs dict
+def _dict_get_or_assign(d, keys, next_pid):
+    """Reference: the old per-key dict walk."""
+    out = np.empty(len(keys), np.int64)
+    for i, k in enumerate(keys.tolist()):
+        if k not in d:
+            d[k] = next_pid
+            next_pid += 1
+        out[i] = d[k]
+    return out, next_pid
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_get_or_assign_matches_dict(seed):
+    rng = np.random.default_rng(seed)
+    store, d = SigStore.empty(), {}
+    np_next, d_next = 0, 0
+    for _ in range(8):
+        # duplicates within and across batches, including already-seen keys
+        keys = rng.integers(0, 50, size=rng.integers(1, 40)).astype(np.uint64)
+        got, np_next = store.get_or_assign(keys, np_next)
+        want, d_next = _dict_get_or_assign(d, keys, d_next)
+        np.testing.assert_array_equal(got, want)
+        assert np_next == d_next
+    assert store.to_dict() == d
+    assert len(store) == len(d)
+
+
+def test_lookup_and_insert():
+    store = SigStore(np.array([5, 1, 9], np.uint64),
+                     np.array([50, 10, 90], np.int64))
+    pids, found = store.lookup(np.array([1, 2, 9, 5], np.uint64))
+    np.testing.assert_array_equal(found, [True, False, True, True])
+    np.testing.assert_array_equal(pids, [10, -1, 90, 50])
+    assert 5 in store and 2 not in store
+    assert store.get(9) == 90 and store.get(2, -7) == -7
+    # insert merges novel keys, keeps existing pids
+    store.insert(np.array([2, 5], np.uint64), np.array([20, 999], np.int64))
+    assert store.get(2) == 20 and store.get(5) == 50
+    assert np.all(store.keys[:-1] < store.keys[1:])  # stays sorted
+
+
+def test_empty_store_lookup():
+    store = SigStore.empty()
+    pids, found = store.lookup(np.array([3, 4], np.uint64))
+    assert not found.any() and (pids == -1).all()
+
+
+def test_fuse_key_roundtrip():
+    hi = np.array([0, 1, 0xFFFFFFFF], np.uint32)
+    lo = np.array([7, 0, 0xFFFFFFFF], np.uint32)
+    k = fuse_key(hi, lo)
+    np.testing.assert_array_equal((k >> np.uint64(32)).astype(np.uint32), hi)
+    np.testing.assert_array_equal(k.astype(np.uint32), lo)
+
+
+# ------------------------------------------------ vectorized signature batch
+@pytest.mark.parametrize("seed", range(4))
+def test_node_signatures_batch_matches_scalar(seed):
+    g = gen.random_graph(60, 200, 3, 2, seed=seed)
+    off = g.out_offsets()
+    pid0 = np.arange(g.num_nodes, dtype=np.int64) % 7
+    pid_prev = (np.arange(g.num_nodes, dtype=np.int64) * 3) % 11
+    pid_tgt = pid_prev[g.dst]
+    nodes = np.unique(np.random.default_rng(seed).integers(
+        0, g.num_nodes, 30)).astype(np.int64)
+    hi, lo = hashes_np.node_signatures_batch(pid0, off, g.elabel, pid_tgt,
+                                             nodes)
+    for i, u in enumerate(nodes.tolist()):
+        s, e = off[u], off[u + 1]
+        h, l = hashes_np.node_signature(pid0[u], g.elabel[s:e],
+                                        pid_tgt[s:e])
+        assert (int(hi[i]), int(lo[i])) == (h, l), u
+
+
+# ------------------------------------------------- stores out of build_bisim
+@pytest.mark.parametrize("mode", ["sorted", "dedup_hash"])
+def test_build_store_resolves_every_node(mode):
+    g = gen.random_graph(50, 150, 3, 2, seed=3)
+    res = build_bisim(g, 3, mode=mode, early_stop=False, with_store=True)
+    assert len(res.stores) == res.pids.shape[0]
+    # level 0: the store must map every node's label to its pid
+    pids, found = res.stores[0].lookup(label_key(g.node_labels))
+    assert found.all()
+    np.testing.assert_array_equal(pids, res.pids[0])
+    # every level: |store| == partition count, pids are a dense 0..P-1 range
+    for j, store in enumerate(res.stores):
+        assert len(store) == res.counts[j]
+        np.testing.assert_array_equal(np.sort(store.pids),
+                                      np.arange(res.counts[j]))
+    assert res.next_pid == res.counts[: len(res.stores)]
+
+
+# ------------------------------------- maintenance sequence vs fresh rebuild
+def _apply_update_sequence(m, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        n = m.graph.num_nodes
+        op = rng.integers(0, 4)
+        if op == 0:
+            m.add_edge(int(rng.integers(0, n)), int(rng.integers(0, 2)),
+                       int(rng.integers(0, n)))
+        elif op == 1 and m.graph.num_edges:
+            i = int(rng.integers(0, m.graph.num_edges))
+            m.delete_edges(m.graph.src[i], m.graph.elabel[i], m.graph.dst[i])
+        elif op == 2:
+            m.add_nodes(rng.integers(0, 3, 3).tolist())
+        else:
+            e = rng.integers(0, n, (4, 2))
+            m.add_edges(e[:, 0], rng.integers(0, 2, 4), e[:, 1])
+
+
+@pytest.mark.parametrize("mode", ["sorted", "dedup_hash"])
+@pytest.mark.parametrize("seed", range(3))
+def test_maintenance_sequence_matches_rebuild(mode, seed):
+    g = gen.random_graph(35, 90, 3, 2, seed=seed)
+    m = BisimMaintainer(g, 4, mode=mode)
+    _apply_update_sequence(m, seed)
+    ref = build_bisim(m.graph, m.k, mode=mode, early_stop=False)
+    for j in range(m.k + 1):
+        assert same_partition(m.pids[j], ref.pids[j]), (mode, seed, j)
+
+
+def test_maintenance_shares_build_store():
+    """The maintainer consumes build_bisim's stores verbatim (one schema
+    for construction and maintenance)."""
+    g = paper_example_graph()
+    res = build_bisim(g, 2, early_stop=False, with_store=True)
+    m = BisimMaintainer(g, 2, result=res)
+    assert all(isinstance(s, SigStore) for s in m.stores)
+    assert m.stores is res.stores
+    m.add_edge(5, 0, 4)  # §4.2 example 2 still works through shared store
+    ref = build_bisim(m.graph, 2, early_stop=False)
+    for j in range(3):
+        assert same_partition(m.pids[j], ref.pids[j])
+
+
+# ------------------------------------------------------ blocked CSR scatter
+@pytest.mark.parametrize("n,e,nb,align", [
+    (64, 200, 8, 32), (33, 77, 4, 16), (17, 0, 8, 8)])
+def test_blocked_csr_layout_vectorized(n, e, nb, align):
+    g = gen.random_graph(n, e, 3, 2, seed=n + e)
+    lay = ops.blocked_csr_layout(g.src, g.dst, g.elabel, n,
+                                 nodes_per_block=nb,
+                                 edges_per_block_align=align)
+    eb = lay["edges_per_block"]
+    assert eb % align == 0
+    assert lay["valid"].sum() == g.num_edges
+    # reconstruct the edge list from the layout and compare as sets
+    valid = lay["valid"]
+    blk = np.repeat(np.arange(lay["num_blocks"]), eb)
+    srcs = blk * nb + lay["local_src"]
+    got = sorted(zip(srcs[valid].tolist(), lay["elabel"][valid].tolist(),
+                     lay["dst"][valid].tolist()))
+    want = sorted(zip(g.src.tolist(), g.elabel.tolist(), g.dst.tolist()))
+    assert got == want
