@@ -1,6 +1,6 @@
 """Paper Fig. 4: signature-store implementations compared.
 
-The paper compares BerkeleyDB B-Tree vs Hash for S. Two TPU-native axes
+The paper compares BerkeleyDB B-Tree vs Hash for S. Three TPU-native axes
 here:
 
   * the three signature modes driving the bulk store during construction:
@@ -8,15 +8,20 @@ here:
     single-key sort) and 'multiset' (sort-free segment-sum);
   * the store data structure itself — the old per-key Python dict vs the
     array-backed sorted ``SigStore`` (searchsorted lookup, merge insert) —
-    measured head-to-head on bulk insert + lookup at 1e5 and 1e6 keys.
+    measured head-to-head on bulk insert + lookup at 1e5 and 1e6 keys;
+  * resident-memory bounds — the in-memory ``SigStore`` vs the
+    ``SpillableSigStore`` (sorted on-disk runs past a spill threshold) at
+    three thresholds, insert + lookup throughput with spill/merge counts.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import numpy as np
 
-from repro.core import SigStore, build_bisim
+from repro.core import SigStore, SpillableSigStore, build_bisim
+from repro.exmem import IOStats
 
 from .datasets import suite
 
@@ -67,6 +72,58 @@ def _store_head_to_head(num_keys: int, seed: int = 0):
     return rows
 
 
+def _spillable_head_to_head(num_keys: int, seed: int = 0,
+                            batch: int = 1 << 16):
+    """In-memory SigStore vs SpillableSigStore at three spill thresholds:
+    batched get_or_assign inserts then a full random re-lookup."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, np.iinfo(np.int64).max, num_keys).astype(np.uint64)
+    probe = rng.permutation(keys)
+    rows = []
+
+    t0 = time.perf_counter()
+    mem = SigStore.empty()
+    nxt = 0
+    for s in range(0, num_keys, batch):
+        _, nxt = mem.get_or_assign(keys[s:s + batch], nxt)
+    mem_insert = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_mem, found = mem.lookup(probe)
+    mem_lookup = time.perf_counter() - t0
+    assert found.all()
+    rows.append((f"spillable/{num_keys}/inmemory_insert", mem_insert * 1e6,
+                 f"keys={num_keys};unique={nxt}"))
+    rows.append((f"spillable/{num_keys}/inmemory_lookup", mem_lookup * 1e6,
+                 f"keys={num_keys}"))
+
+    for frac in (2, 8, 32):
+        thr = max(num_keys // frac, 1)
+        with tempfile.TemporaryDirectory() as td:
+            io = IOStats()
+            store = SpillableSigStore(spill_threshold=thr, spill_dir=td,
+                                      io=io)
+            t0 = time.perf_counter()
+            nxt_s = 0
+            for s in range(0, num_keys, batch):
+                _, nxt_s = store.get_or_assign(keys[s:s + batch], nxt_s)
+            sp_insert = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            out_sp, found = store.lookup(probe)
+            sp_lookup = time.perf_counter() - t0
+            assert found.all() and nxt_s == nxt
+            assert out_sp.sum() == out_mem.sum()
+            rows.append((
+                f"spillable/{num_keys}/thr{frac}_insert", sp_insert * 1e6,
+                f"threshold={thr};spills={io.spills};"
+                f"merges={io.merge_passes};"
+                f"vs_inmemory={sp_insert / mem_insert:.2f}x"))
+            rows.append((
+                f"spillable/{num_keys}/thr{frac}_lookup", sp_lookup * 1e6,
+                f"threshold={thr};runs={store.num_spilled_runs};"
+                f"vs_inmemory={sp_lookup / mem_lookup:.2f}x"))
+    return rows
+
+
 def run(scale: int = 1, k: int = 10):
     rows = []
     for name, g in list(suite(scale).items())[:4]:
@@ -81,4 +138,5 @@ def run(scale: int = 1, k: int = 10):
                 f"bytes_sorted={total_sorted};iters={len(res.counts) - 1}"))
     for num_keys in (10**5, 10**6 * scale):
         rows.extend(_store_head_to_head(num_keys))
+    rows.extend(_spillable_head_to_head(10**6 * scale))
     return rows

@@ -6,6 +6,7 @@ incremental maintenance -> validate -> persist.
         PYTHONPATH=src python examples/bisim_pipeline.py --distributed
 """
 import argparse
+import os
 import sys
 import time
 
@@ -58,6 +59,9 @@ def main():
     assert same_partition(m.pid(), ref.pids[-1])
     print("maintenance == rebuild: OK")
 
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
     np.savez_compressed(args.out, pids=res.pids[-1])
     print(f"final partition saved to {args.out}")
 

@@ -13,13 +13,13 @@ from .distributed import (ShardedGraph, build_bisim_distributed,
                           make_flat_mesh, shard_graph)
 from .maintenance import BisimMaintainer, MaintenanceReport
 from .oracle import is_k_bisimilar, oracle_pids
-from .sig_store import SigStore, fuse_key, label_key
-from . import signatures
+from .sig_store import SigStore, SpillableSigStore, fuse_key, label_key
+from . import hashes_np, signatures
 
 __all__ = [
     "BisimResult", "IterationStats", "build_bisim", "partition_blocks",
     "refines", "same_partition", "ShardedGraph", "build_bisim_distributed",
     "make_flat_mesh", "shard_graph", "BisimMaintainer", "MaintenanceReport",
-    "is_k_bisimilar", "oracle_pids", "SigStore", "fuse_key", "label_key",
-    "signatures",
+    "is_k_bisimilar", "oracle_pids", "SigStore", "SpillableSigStore",
+    "fuse_key", "label_key", "hashes_np", "signatures",
 ]

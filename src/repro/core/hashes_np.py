@@ -92,6 +92,27 @@ def signatures_from_edges(pid0_vals: np.ndarray, seg: np.ndarray,
     return hash_triple(seg_hi, seg_lo, pid0_vals)
 
 
+def csr_gather(offsets: np.ndarray, nodes: np.ndarray):
+    """Edge indices of all CSR rows in `nodes`, concatenated.
+
+    Returns (idx int64 [sum deg], seg int64 [sum deg]) where seg[i] is the
+    position in `nodes` that idx[i]'s edge belongs to. Shared by the batch
+    signature path below and the maintenance frontier gathers.
+    """
+    offsets = np.asarray(offsets)
+    nodes = np.asarray(nodes, dtype=np.int64)
+    starts = offsets[nodes].astype(np.int64)
+    cnts = offsets[nodes + 1].astype(np.int64) - starts
+    total = int(cnts.sum())
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    seg = np.repeat(np.arange(nodes.shape[0], dtype=np.int64), cnts)
+    ends = np.cumsum(cnts)
+    idx = np.arange(total, dtype=np.int64) + np.repeat(
+        starts - (ends - cnts), cnts)
+    return idx, seg
+
+
 def node_signatures_batch(pid0: np.ndarray, offsets: np.ndarray,
                           elabel: np.ndarray, pid_tgt: np.ndarray,
                           nodes: np.ndarray, *, dedup: bool = True):
@@ -105,19 +126,7 @@ def node_signatures_batch(pid0: np.ndarray, offsets: np.ndarray,
     is one CSR gather + lexsort dedup + segment wrap-sum, no Python loop.
     """
     nodes = np.asarray(nodes, dtype=np.int64)
-    m = nodes.shape[0]
-    starts = np.asarray(offsets)[nodes].astype(np.int64)
-    cnts = np.asarray(offsets)[nodes + 1].astype(np.int64) - starts
-    total = int(cnts.sum())
-    if not total:
-        return signatures_from_edges(
-            np.asarray(pid0)[nodes], np.empty(0, np.int64),
-            np.empty(0, np.int64), np.empty(0, np.int64), m, dedup=dedup)
-    # concatenated out-edge indices of all batch rows
-    seg = np.repeat(np.arange(m, dtype=np.int64), cnts)
-    ends = np.cumsum(cnts)
-    idx = np.arange(total, dtype=np.int64) + np.repeat(
-        starts - (ends - cnts), cnts)
+    idx, seg = csr_gather(offsets, nodes)
     return signatures_from_edges(
         np.asarray(pid0)[nodes], seg, np.asarray(elabel)[idx],
-        np.asarray(pid_tgt)[idx], m, dedup=dedup)
+        np.asarray(pid_tgt)[idx], nodes.shape[0], dedup=dedup)

@@ -46,22 +46,8 @@ class MaintenanceReport:
     rebuilt: bool = False
 
 
-def _csr_gather(offsets: np.ndarray, nodes: np.ndarray):
-    """Edge indices of all CSR rows in `nodes`, concatenated.
-
-    Returns (idx int64 [sum deg], seg int64 [sum deg]) where seg[i] is the
-    position in `nodes` that idx[i]'s edge belongs to.
-    """
-    starts = offsets[nodes]
-    cnts = (offsets[nodes + 1] - starts).astype(np.int64)
-    total = int(cnts.sum())
-    if total == 0:
-        return np.empty(0, np.int64), np.empty(0, np.int64)
-    seg = np.repeat(np.arange(nodes.shape[0], dtype=np.int64), cnts)
-    ends = np.cumsum(cnts)
-    idx = np.arange(total, dtype=np.int64) + np.repeat(
-        starts.astype(np.int64) - (ends - cnts), cnts)
-    return idx, seg
+# the CSR frontier gather is shared with the batch signature path
+_csr_gather = hashes_np.csr_gather
 
 
 class BisimMaintainer:
@@ -78,6 +64,9 @@ class BisimMaintainer:
         self.mode = mode
         self.rebuild_threshold = rebuild_threshold
         self.graph = graph
+        # delete_node leaves an isolated tombstone row (dense id space);
+        # compact() later drops the flagged rows and remaps ids.
+        self._tombstone = np.zeros(graph.num_nodes, dtype=bool)
         self._build(result)
 
     # ------------------------------------------------------------------
@@ -120,6 +109,8 @@ class BisimMaintainer:
         new_ids = list(range(self.graph.num_nodes,
                              self.graph.num_nodes + labels.shape[0]))
         self.graph = self.graph.with_nodes_added(labels)
+        self._tombstone = np.concatenate(
+            [self._tombstone, np.zeros(labels.shape[0], dtype=bool)])
         grow = np.zeros(labels.shape[0], dtype=np.int64)
         for j in range(self.k + 1):
             self.pids[j] = np.concatenate([self.pids[j], grow])
@@ -146,7 +137,12 @@ class BisimMaintainer:
         src = np.atleast_1d(np.asarray(src, dtype=np.int32))
         dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
         elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
+        # construct (and so range-validate) the new graph before touching
+        # tombstones: a rejected insert must not re-animate anything
         self.graph = self.graph.with_edges_added(src, dst, elabel)
+        # an edge incident to a tombstoned node re-animates it
+        self._tombstone[src] = False
+        self._tombstone[dst] = False
         self._refresh_indexes()
         return self._propagate(frontier0=np.unique(src))
 
@@ -164,6 +160,10 @@ class BisimMaintainer:
 
     def delete_node(self, nid: int) -> MaintenanceReport:
         """Remove a node: first its incident edges, then the node row."""
+        if not 0 <= nid < self.graph.num_nodes:
+            # reject before any mutation (negative ids would wrap around
+            # and tombstone a live row)
+            raise ValueError(f"node id out of range: {nid}")
         g = self.graph
         out_mask = g.src == nid
         in_mask = g.dst == nid
@@ -171,8 +171,43 @@ class BisimMaintainer:
                                 g.elabel[out_mask | in_mask],
                                 g.dst[out_mask | in_mask])
         # The paper then drops the N_t row; we keep a tombstone (isolated
-        # node) to preserve the dense id space of the column tables.
+        # node) to preserve the dense id space until compact() runs.
+        self._tombstone[nid] = True
         return rep
+
+    def compact(self) -> np.ndarray:
+        """Drop tombstoned rows: densely remap node ids, slice the pid
+        history, and rebuild both CSR copies (the deferred half of the
+        paper's DELETE_NODE, which removes the N_t row outright).
+
+        Returns the old->new id map (int64 [old_N]; -1 for dropped rows).
+        The stores are untouched: they map signatures, not node ids, and a
+        surviving signature still denotes the same behavior class.
+        """
+        dead = self._tombstone
+        remap = np.cumsum(~dead, dtype=np.int64) - 1
+        remap[dead] = -1
+        if not dead.any():
+            return remap
+        keep = ~dead
+        g = self.graph
+        # delete_node removed incident edges; keep only live-endpoint edges
+        # anyway so a stale tombstone cannot corrupt the remap.
+        emask = keep[g.src] & keep[g.dst]
+        self.graph = Graph(
+            g.node_labels[keep],
+            remap[g.src[emask]].astype(np.int32),
+            remap[g.dst[emask]].astype(np.int32),
+            g.elabel[emask])  # monotone remap keeps (src,elabel,dst) order
+        for j in range(self.k + 1):
+            self.pids[j] = self.pids[j][keep]
+        self._tombstone = np.zeros(self.graph.num_nodes, dtype=bool)
+        self._refresh_indexes()
+        return remap
+
+    @property
+    def num_tombstones(self) -> int:
+        return int(self._tombstone.sum())
 
     # ------------------------------------------------------- propagation
     def _propagate(self, frontier0: np.ndarray) -> MaintenanceReport:

@@ -20,8 +20,14 @@ ones:
 
 Level 0 reuses the same store with ``key = uint64(node_label)`` (hi lane 0),
 so construction and maintenance share one schema for every level.
+
+``SpillableSigStore`` bounds resident memory for the out-of-core engine
+(`repro.exmem`): past ``spill_threshold`` entries the sorted run is flushed
+to disk and probed there — the paper's S as an actual sorted *file*.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
@@ -78,18 +84,20 @@ class SigStore:
         return int(self.keys.shape[0])
 
     def __contains__(self, key) -> bool:
-        k = _U64(key)
-        i = np.searchsorted(self.keys, k)
-        return bool(i < self.keys.shape[0] and self.keys[i] == k)
+        # via self.lookup so subclasses that store keys elsewhere (the
+        # spillable store's disk runs) answer correctly too
+        _, found = self.lookup(np.asarray([key], dtype=_U64))
+        return bool(found[0])
 
     def lookup(self, keys) -> tuple[np.ndarray, np.ndarray]:
         """Bulk lookup. Returns (pids int64, found bool); missing -> -1."""
         keys = np.asarray(keys, dtype=_U64)
+        n_mem = int(self.keys.shape[0])  # resident run only (see Spillable)
         idx = np.searchsorted(self.keys, keys)
-        idx_c = np.minimum(idx, max(len(self) - 1, 0))
-        found = (np.zeros(keys.shape, bool) if len(self) == 0
+        idx_c = np.minimum(idx, max(n_mem - 1, 0))
+        found = (np.zeros(keys.shape, bool) if n_mem == 0
                  else self.keys[idx_c] == keys)
-        out = np.where(found, self.pids[idx_c] if len(self) else -1, -1)
+        out = np.where(found, self.pids[idx_c] if n_mem else -1, -1)
         return out.astype(np.int64, copy=False), found
 
     def get(self, key, default=None):
@@ -152,3 +160,229 @@ class SigStore:
 
     def slice_copy(self) -> "SigStore":
         return SigStore(self.keys.copy(), self.pids.copy(), presorted=True)
+
+
+class SpillableSigStore(SigStore):
+    """`SigStore` with bounded resident memory (paper §3.2: S is a sorted
+    *file*, not an in-RAM map).
+
+    The in-memory sorted run behaves exactly like `SigStore`; once it grows
+    past ``spill_threshold`` entries it is flushed to a sorted on-disk run
+    (two parallel ``.npy`` files, keys u64 + pids i64).  Lookups probe the
+    resident run first, then `np.searchsorted` each memory-mapped disk run
+    — O(log) page touches per run.  When more than ``max_runs`` runs
+    accumulate they are k-way merged back into a single run with a bounded
+    block budget, the same sort/merge discipline as `exmem.runs`.  A key
+    lives in exactly one place (inserts check membership first), so probe
+    order never changes an answer.
+
+    ``io`` (an `exmem.runs.IOStats`) charges spills and merges to
+    `sort_cost`, mirroring the paper's accounting of maintaining S.
+    """
+
+    __slots__ = ("spill_threshold", "max_runs", "spill_dir", "io",
+                 "_runs", "_run_seq", "_owns_dir", "_mmaps")
+
+    def __init__(self, spill_threshold: int = 1 << 20, *,
+                 spill_dir: "str | None" = None, max_runs: int = 8,
+                 io=None):
+        super().__init__(np.empty(0, _U64), np.empty(0, np.int64),
+                         presorted=True)
+        if spill_threshold < 1:
+            raise ValueError("spill_threshold must be >= 1")
+        if max_runs < 2:
+            # with a single victim the tiered merge could never reduce the
+            # run count, so fan-out would grow without bound
+            raise ValueError("max_runs must be >= 2")
+        self.spill_threshold = int(spill_threshold)
+        self.max_runs = int(max_runs)
+        self.io = io
+        self._owns_dir = spill_dir is None
+        if spill_dir is None:
+            import tempfile
+            spill_dir = tempfile.mkdtemp(prefix="sigstore-spill-")
+        os.makedirs(spill_dir, exist_ok=True)
+        self.spill_dir = spill_dir
+        self._runs = []      # list of (keys_path, pids_path, length)
+        self._run_seq = 0
+        self._mmaps = {}     # path -> open memmap (runs are immutable)
+
+    # ------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return int(self.keys.shape[0]) + sum(ln for _, _, ln in self._runs)
+
+    @property
+    def num_spilled_runs(self) -> int:
+        return len(self._runs)
+
+    def _mmap(self, path: str) -> np.ndarray:
+        """Open-once memmap of a run file (runs are immutable until their
+        file is deleted by a merge, which also evicts the cache entry)."""
+        mm = self._mmaps.get(path)
+        if mm is None:
+            mm = self._mmaps[path] = np.load(path, mmap_mode="r")
+        return mm
+
+    def lookup(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        keys = np.asarray(keys, dtype=_U64)
+        out, found = super().lookup(keys)
+        for kp, pp, ln in self._runs:
+            if found.all():
+                break
+            rk = self._mmap(kp)
+            miss = np.flatnonzero(~found)
+            idx = np.searchsorted(rk, keys[miss])
+            idx_c = np.minimum(idx, ln - 1)
+            hit = np.asarray(rk[idx_c]) == keys[miss]
+            if hit.any():
+                rp = self._mmap(pp)
+                out[miss[hit]] = rp[idx_c[hit]]
+                found[miss[hit]] = True
+        return out, found
+
+    # ------------------------------------------------------------- updates
+    def insert(self, keys, pids) -> None:
+        super().insert(keys, pids)
+        self._maybe_spill()
+
+    def get_or_assign(self, keys, next_pid: int) -> tuple[np.ndarray, int]:
+        out, nxt = super().get_or_assign(keys, next_pid)
+        self._maybe_spill()
+        return out, nxt
+
+    # ------------------------------------------------------------ spilling
+    def _maybe_spill(self) -> None:
+        if self.keys.shape[0] > self.spill_threshold:
+            self._spill()
+        if len(self._runs) > self.max_runs:
+            self._merge_runs()
+
+    def _spill(self) -> None:
+        n = int(self.keys.shape[0])
+        if n == 0:
+            return
+        kp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.keys.npy")
+        pp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.pids.npy")
+        np.save(kp, self.keys)
+        np.save(pp, self.pids)
+        self._runs.append((kp, pp, n))
+        self._run_seq += 1
+        if self.io is not None:
+            self.io.spills += 1
+            self.io.count_sort(n, self.keys.nbytes + self.pids.nbytes)
+        self.keys = np.empty(0, _U64)
+        self.pids = np.empty(0, np.int64)
+
+    def _merge_runs(self, budget_rows: int = 1 << 16) -> None:
+        """Size-tiered merge: collapse the `max_runs` *smallest* runs into
+        one (bounded block buffers per run), leaving larger runs alone —
+        each key is rewritten O(log n/threshold) times total instead of on
+        every merge cycle (the LSM-style amplification bound).
+
+        Keys are globally unique across runs, so the merged run is strictly
+        sorted and pid payloads ride along unchanged.
+
+        Deliberately NOT `exmem.runs.merge_runs`: that operates on
+        structured record files, whose per-field views are strided —
+        `np.searchsorted` over a strided mmap copies the whole column, so
+        lookups would load every run into RAM.  The two parallel
+        contiguous files keep probes at O(log) page touches, at the cost
+        of this dedicated single-key merge.
+        """
+        from numpy.lib.format import open_memmap
+        by_size = sorted(self._runs, key=lambda r: r[2])
+        victims = by_size[:self.max_runs]
+        survivors = by_size[self.max_runs:]
+        srcs = [(np.load(kp, mmap_mode="r"), np.load(pp, mmap_mode="r"), ln)
+                for kp, pp, ln in victims]
+        total = sum(ln for _, _, ln in srcs)
+        out_kp = os.path.join(self.spill_dir,
+                              f"run_{self._run_seq:06d}.keys.npy")
+        out_pp = os.path.join(self.spill_dir,
+                              f"run_{self._run_seq:06d}.pids.npy")
+        self._run_seq += 1
+        mk = open_memmap(out_kp, mode="w+", dtype=_U64, shape=(total,))
+        mp = open_memmap(out_pp, mode="w+", dtype=np.int64, shape=(total,))
+        block = max(budget_rows // max(len(srcs), 1), 1)
+        cur = [0] * len(srcs)
+        bufk: list = [None] * len(srcs)
+        bufp: list = [None] * len(srcs)
+        pos = 0
+        while True:
+            active = []
+            for i, (rk, rp, ln) in enumerate(srcs):
+                if bufk[i] is None or bufk[i].shape[0] == 0:
+                    if cur[i] < ln:
+                        bufk[i] = np.array(rk[cur[i]:cur[i] + block])
+                        bufp[i] = np.array(rp[cur[i]:cur[i] + block])
+                        cur[i] += bufk[i].shape[0]
+                    else:
+                        bufk[i] = bufp[i] = None
+                if bufk[i] is not None:
+                    active.append(i)
+            if not active:
+                break
+            bound = None
+            for i in active:
+                if cur[i] < srcs[i][2]:
+                    last = bufk[i][-1]
+                    if bound is None or last < bound:
+                        bound = last
+            tk, tp = [], []
+            for i in active:
+                cnt = (bufk[i].shape[0] if bound is None
+                       else int(np.searchsorted(bufk[i], bound,
+                                                side="right")))
+                if cnt:
+                    tk.append(bufk[i][:cnt])
+                    tp.append(bufp[i][:cnt])
+                    bufk[i] = bufk[i][cnt:]
+                    bufp[i] = bufp[i][cnt:]
+            ck = np.concatenate(tk)
+            cp = np.concatenate(tp)
+            order = np.argsort(ck, kind="stable")
+            mk[pos:pos + ck.shape[0]] = ck[order]
+            mp[pos:pos + cp.shape[0]] = cp[order]
+            pos += ck.shape[0]
+        mk.flush()
+        mp.flush()
+        del mk, mp, srcs
+        if self.io is not None:
+            self.io.merge_passes += 1
+            self.io.count_sort(total, total * 16)
+        for kp, pp, _ in victims:
+            for p in (kp, pp):
+                self._mmaps.pop(p, None)
+                os.remove(p)
+        self._runs = survivors + [(out_kp, out_pp, total)]
+
+    # --------------------------------------------------------------- misc
+    def slice_copy(self) -> "SigStore":
+        """Materialize (memory + all disk runs) as a plain in-RAM copy."""
+        keys, pids = self.merged_arrays()
+        return SigStore(keys, pids, presorted=True)
+
+    def merged_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Fully materialized sorted (keys, pids) — tests/debugging only."""
+        ks = [self.keys] + [np.load(kp) for kp, _, _ in self._runs]
+        ps = [self.pids] + [np.load(pp) for _, pp, _ in self._runs]
+        keys = np.concatenate(ks)
+        pids = np.concatenate(ps)
+        order = np.argsort(keys, kind="stable")
+        return keys[order], pids[order]
+
+    def to_dict(self) -> dict:
+        keys, pids = self.merged_arrays()
+        return {int(k): int(p) for k, p in zip(keys.tolist(), pids.tolist())}
+
+    def close(self) -> None:
+        """Delete the spill runs (and the spill dir if we created it)."""
+        self._mmaps.clear()
+        for kp, pp, _ in self._runs:
+            for p in (kp, pp):
+                if os.path.exists(p):
+                    os.remove(p)
+        self._runs = []
+        if self._owns_dir:
+            import shutil
+            shutil.rmtree(self.spill_dir, ignore_errors=True)

@@ -1,0 +1,41 @@
+"""External-memory subsystem: graph size independent of RAM (paper §3).
+
+The source paper's contribution is an *I/O-efficient* k-bisimulation
+algorithm whose cost is `O(k·sort(|E_t|) + k·scan(|N_t|) + sort(|N_t|))`
+over disk-resident tables.  This package is the reproduction of that
+regime; each module maps onto a Section-3 construct:
+
+  runs.py    §3.1's two I/O primitives. `external_sort` is `sort(X)`:
+             run formation over memory-sized chunks plus a bounded-budget
+             k-way merge of memory-mapped `.npy` runs; `IOStats` is the
+             cost model itself (`sort_cost`/`scan_cost` record counters
+             plus byte traffic).
+
+  tables.py  §2 Tables 2-3. `OocGraph` holds N_t and E_t as chunked
+             on-disk column tables in the two sort orders Algorithm 1
+             consumes: E_tst by (sId, eLabel, tId) and E_tts by
+             (tId, sId).  `Graph.to_ooc()` / `OocGraph.to_memory()`
+             convert; `save`/`load` fix the directory format.
+
+  build.py   §3.2 Algorithm 1 as a streamed pipeline
+             (`build_bisim_oocore`): sequential merge join of E_tts
+             against the sorted pId_{j-1} file (lines 9-11), external
+             re-sort of the joined records (line 12), per-chunk dedup +
+             device fold via the jitted signature hash/segment-sum step
+             (lines 13-15), and global ranking through a
+             `SpillableSigStore` — `core.sig_store`'s §3.2 sorted
+             signature file S with spill-to-disk runs (lines 16-18).
+
+Partitions are identical (up to pid renaming) to the in-memory
+`repro.core.build_bisim` in every signature mode.
+"""
+from .build import OocBisimResult, build_bisim_oocore
+from .runs import (IOStats, external_sort, lexsort_records, make_records,
+                   merge_runs, sort_to_runs)
+from .tables import OocGraph
+
+__all__ = [
+    "OocBisimResult", "build_bisim_oocore", "IOStats", "external_sort",
+    "lexsort_records", "make_records", "merge_runs", "sort_to_runs",
+    "OocGraph",
+]

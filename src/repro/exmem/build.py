@@ -1,0 +1,354 @@
+"""Streamed Build_Bisim (Algorithm 1) over disk-resident tables.
+
+`build_bisim_oocore` is the out-of-core sibling of
+`repro.core.build_bisim`: same partition (up to pid renaming), but every
+table — N_t, both E_t sort orders, the per-level pId files and the
+signature store S — lives on disk, and per-iteration resident memory is a
+constant number of chunks.  The per-iteration pipeline follows the
+paper's sort/scan discipline exactly:
+
+  1. *join* (lines 9-11): scan E_tts (sorted by tId) and the pId_{j-1}
+     file (sorted by nId) in lockstep — a sequential sort-merge join that
+     resolves every edge's `pId_old(tId)` with zero random accesses —
+     emitting (sId, eLabel, pId) records.
+  2. *re-sort* (line 12): `runs.external_sort` brings the joined records
+     into (sId, eLabel, pId) order: run formation + bounded-memory k-way
+     merge, the `O(sort(|E_t|))` term.
+  3. *fold* (lines 13-15): the sorted stream is deduplicated (set
+     semantics; skipped in `multiset` mode) and folded chunk-by-chunk on
+     device: one jitted hash + segment-sum program (the same mix-hash
+     lanes as `core.signatures`) turns each chunk into per-source partial
+     signature sums; the u32 lanes are wrap-add combined across chunk
+     boundaries on the host.
+  4. *rank* (lines 16-18): walking N_t in node order, each node chunk's
+     signature hashes are resolved to dense pids through a
+     `SpillableSigStore` and appended to the pId_j file — the paper's
+     sorted signature file S with spill-to-disk behavior.
+
+`IOStats.sort_cost`/`scan_cost` count records through these passes, so a
+k-iteration build shows the paper's `O(k·sort(|E_t|) + k·scan(|N_t|) +
+sort(|N_t|))` shape: both counters grow linearly in k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import shutil
+import tempfile
+import time
+from typing import Iterator, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.lib.format import open_memmap
+
+from repro.core import hashes_np
+from repro.core import signatures as sig
+from repro.core.partition import IterationStats
+from repro.core.sig_store import SpillableSigStore, fuse_key, label_key
+from repro.graph.storage import Graph
+
+from . import runs as runs_mod
+from .runs import IOStats
+from .tables import OocGraph
+
+_JOIN_DTYPE = np.dtype([("src", "<i4"), ("elabel", "<i4"), ("pid", "<i4")])
+_JOIN_KEYS = ("src", "elabel", "pid")
+
+
+@dataclasses.dataclass
+class OocBisimResult:
+    """`BisimResult` sibling whose pid history lives in per-level files."""
+
+    workdir: str
+    pid_paths: list                 # pid_j file per level (int32 [N] .npy)
+    counts: list                    # partitions per iteration
+    stats: list                     # list[IterationStats]
+    io: IOStats                     # cumulative sort/scan counters
+    converged_at: Optional[int]
+    k_requested: int
+    num_nodes: int
+    _pids_cache: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def k_effective(self) -> int:
+        return len(self.pid_paths) - 1
+
+    @property
+    def pids(self) -> np.ndarray:
+        """Full pid history, materialized in memory (small graphs/tests)."""
+        if self._pids_cache is None:
+            self._pids_cache = np.stack(
+                [np.load(p) for p in self.pid_paths])
+        return self._pids_cache
+
+    def pid_at(self, j: int) -> np.ndarray:
+        """pId_j with Change-k semantics past convergence (Prop. 7)."""
+        return np.load(self.pid_paths[min(j, self.k_effective)])
+
+    def cleanup(self) -> None:
+        shutil.rmtree(self.workdir, ignore_errors=True)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "use_kernel"))
+def _fold_chunk(elabel, pid_tgt, seg, keep, *, num_segments: int,
+                use_kernel: bool = False):
+    """Device fold of one sorted edge chunk: per-edge signature hash pair
+    (the same `hash_pair` lanes the in-memory engine uses; with
+    `use_kernel` routed through the kernels package like
+    `signature_hashes` does) masked by `keep` (dedup/padding), then
+    segment-summed per local source id."""
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        e_hi, e_lo = kernel_ops.edge_hash(elabel, pid_tgt)
+    else:
+        e_hi, e_lo = sig.hash_pair(elabel, pid_tgt)
+    zero = jnp.uint32(0)
+    e_hi = jnp.where(keep, e_hi, zero)
+    e_lo = jnp.where(keep, e_lo, zero)
+    return (jax.ops.segment_sum(e_hi, seg, num_segments=num_segments),
+            jax.ops.segment_sum(e_lo, seg, num_segments=num_segments))
+
+
+def _joined_chunks(ooc: OocGraph, pid_mm: np.ndarray, window_rows: int,
+                   io: IOStats) -> Iterator[np.ndarray]:
+    """Stage 1: E_tts ⋈ pId_{j-1} as a sequential merge join.
+
+    Both inputs are sorted by target/node id, so the pid file advances
+    monotonically and is scanned once per iteration (counted by the
+    caller).  A chunk's dst *span* is unbounded on sparse graphs
+    (N >> E), so each chunk is consumed in sub-ranges whose pid window is
+    capped at `window_rows` — resident memory stays a constant number of
+    chunks regardless of sparsity."""
+    for chunk in ooc.iter_edges_tts(io):
+        dst = chunk["dst"].astype(np.int64)
+        pos = 0
+        while pos < dst.shape[0]:
+            d0 = int(dst[pos])
+            cut = int(np.searchsorted(dst, d0 + window_rows, side="left"))
+            window = np.asarray(pid_mm[d0:d0 + window_rows])
+            part = slice(pos, cut)
+            rec = np.empty(cut - pos, _JOIN_DTYPE)
+            rec["src"] = chunk["src"][part]
+            rec["elabel"] = chunk["elabel"][part]
+            rec["pid"] = window[dst[part] - d0]
+            pos = cut
+            yield rec
+
+
+def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
+                        dedup: bool, use_kernel: bool = False):
+    """Stage 3: consume (src, elabel, pid)-sorted chunks; yield
+    (src_unique, hi_partial, lo_partial) per chunk, sorted by src.
+
+    Duplicate (src, elabel, pid) records are dropped across chunk
+    boundaries too (set semantics, Algorithm 1 line 13); partial sums for
+    a source spanning several chunks are combined by the caller (u32
+    wrap-add is associative)."""
+
+    def _rechunk():
+        # merge_runs can overshoot its budget by up to one row per run
+        # (every live run contributes >= 1-row blocks); split so the fold
+        # always fits the fixed jit shape.
+        for chunk in stream:
+            for s in range(0, chunk.shape[0], chunk_edges):
+                yield chunk[s:s + chunk_edges]
+
+    prev_last = None
+    for chunk in _rechunk():
+        src = chunk["src"]
+        lab = chunk["elabel"]
+        pid = chunk["pid"]
+        n = src.shape[0]
+        if n == 0:
+            continue
+        keep = np.ones(n, dtype=bool)
+        if dedup:
+            keep[1:] = ((src[1:] != src[:-1]) | (lab[1:] != lab[:-1])
+                        | (pid[1:] != pid[:-1]))
+            if prev_last is not None:
+                keep[0] = (int(src[0]), int(lab[0]),
+                           int(pid[0])) != prev_last
+        prev_last = (int(src[-1]), int(lab[-1]), int(pid[-1]))
+        new_src = np.ones(n, dtype=bool)
+        new_src[1:] = src[1:] != src[:-1]
+        seg = np.cumsum(new_src, dtype=np.int32) - np.int32(1)
+        src_u = src[new_src].astype(np.int64)
+        pad = chunk_edges - n
+        if pad:
+            lab = np.concatenate([lab, np.zeros(pad, np.int32)])
+            pid = np.concatenate([pid, np.zeros(pad, np.int32)])
+            seg = np.concatenate(
+                [seg, np.full(pad, chunk_edges - 1, np.int32)])
+            keep = np.concatenate([keep, np.zeros(pad, bool)])
+        hi, lo = _fold_chunk(lab, pid, seg, keep,
+                             num_segments=chunk_edges,
+                             use_kernel=use_kernel)
+        u = src_u.shape[0]
+        yield src_u, np.asarray(hi)[:u], np.asarray(lo)[:u]
+
+
+def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
+                       mode: str = "sorted", chunk_edges: int = 1 << 16,
+                       chunk_nodes: Optional[int] = None,
+                       early_stop: bool = True,
+                       workdir: Optional[str] = None,
+                       spill_threshold: int = 1 << 20,
+                       use_kernel: bool = False) -> OocBisimResult:
+    """Out-of-core Build_Bisim. Accepts an in-memory `Graph` (spilled to
+    chunked tables first) or an `OocGraph` (whose chunk geometry wins).
+
+    mode: 'sorted' / 'dedup_hash' (set semantics, identical partitions) or
+    'multiset' (counting bisimulation; dedup pass skipped). Partitions are
+    identical, up to pid renaming, to `build_bisim` in the same mode.
+    """
+    if mode not in ("sorted", "dedup_hash", "multiset"):
+        raise ValueError(f"unknown signature mode: {mode}")
+    dedup = mode != "multiset"
+    owns_workdir = workdir is None
+    if owns_workdir:
+        workdir = tempfile.mkdtemp(prefix="oocore-")
+    os.makedirs(workdir, exist_ok=True)
+    try:
+        return _build_oocore(
+            graph, k, mode=mode, dedup=dedup, chunk_edges=chunk_edges,
+            chunk_nodes=chunk_nodes, early_stop=early_stop,
+            workdir=workdir, spill_threshold=spill_threshold,
+            use_kernel=use_kernel)
+    except BaseException:
+        if owns_workdir:
+            # a failed build must not strand GBs of spilled tables in a
+            # tempdir the caller has no handle to
+            shutil.rmtree(workdir, ignore_errors=True)
+        raise
+
+
+def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
+                  dedup: bool, chunk_edges: int,
+                  chunk_nodes: Optional[int], early_stop: bool,
+                  workdir: str, spill_threshold: int,
+                  use_kernel: bool) -> OocBisimResult:
+    io = IOStats()
+    if isinstance(graph, Graph):
+        ooc = OocGraph.from_graph(
+            graph, os.path.join(workdir, "graph"),
+            chunk_nodes=chunk_nodes or chunk_edges, chunk_edges=chunk_edges)
+    else:
+        ooc = graph
+    n = ooc.num_nodes
+    c_edges = ooc.chunk_edges
+    c_nodes = ooc.chunk_nodes
+
+    def _pid_path(j: int) -> str:
+        return os.path.join(workdir, f"pid_{j:03d}.npy")
+
+    def _new_store(it_dir: str) -> SpillableSigStore:
+        return SpillableSigStore(
+            spill_threshold=spill_threshold,
+            spill_dir=os.path.join(it_dir, "store"), io=io)
+
+    # ---------------------------------------------------- iteration 0
+    # Rank node labels into pId_0, streaming N_t chunk by chunk through
+    # the store — the paper's one-off `sort(|N_t|)` term.
+    t0 = time.perf_counter()
+    s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
+    it_dir = os.path.join(workdir, "it000")
+    store = _new_store(it_dir)
+    pid_mm = open_memmap(_pid_path(0), mode="w+", dtype=np.int32,
+                         shape=(n,))
+    next_pid = 0
+    for base, labels in ooc.iter_nodes(io):
+        pids_chunk, next_pid = store.get_or_assign(label_key(labels),
+                                                   next_pid)
+        pid_mm[base:base + labels.shape[0]] = pids_chunk.astype(np.int32)
+        io.count_sort(labels.shape[0], labels.shape[0] * 4)  # ranking
+    pid_mm.flush()
+    store.close()
+    shutil.rmtree(it_dir, ignore_errors=True)
+    counts = [next_pid]
+    stats = [IterationStats(0, next_pid, time.perf_counter() - t0,
+                            bytes_sorted=io.sort_bytes - s_sort0,
+                            bytes_scanned=io.scan_bytes - s_scan0)]
+    pid_paths = [_pid_path(0)]
+
+    pid0_mm = np.load(_pid_path(0), mmap_mode="r")
+    converged_at = None
+    for j in range(1, k + 1):
+        t0 = time.perf_counter()
+        s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
+        it_dir = os.path.join(workdir, f"it{j:03d}")
+        os.makedirs(it_dir, exist_ok=True)
+        pid_prev_mm = np.load(pid_paths[-1], mmap_mode="r")
+
+        # stages 1+2: join then external re-sort into (src, elabel, pid)
+        sorted_stream = runs_mod.external_sort(
+            _joined_chunks(ooc, pid_prev_mm, c_nodes, io), _JOIN_KEYS,
+            os.path.join(it_dir, "sort"), budget_rows=c_edges, stats=io)
+        io.count_scan(n, n * 4)  # the pid_{j-1} file scan of the join
+
+        # stages 3+4: device fold + streamed ranking in node order
+        store = _new_store(it_dir)
+        pid_new_mm = open_memmap(_pid_path(j), mode="w+", dtype=np.int32,
+                                 shape=(n,))
+        acc_hi = np.zeros(c_nodes, np.uint32)
+        acc_lo = np.zeros(c_nodes, np.uint32)
+        next_pid = 0
+        node_base = 0
+
+        def _finalize_window(base: int) -> int:
+            nonlocal next_pid
+            end = min(base + c_nodes, n)
+            p0 = np.asarray(pid0_mm[base:end])
+            io.count_scan(end - base, (end - base) * 4)  # pId_0 scan
+            hi, lo = hashes_np.hash_triple(acc_hi[:end - base],
+                                           acc_lo[:end - base], p0)
+            keys = fuse_key(hi, lo)
+            pids_chunk, next_pid = store.get_or_assign(keys, next_pid)
+            pid_new_mm[base:end] = pids_chunk.astype(np.int32)
+            io.count_sort(end - base, (end - base) * 8)  # ranking via S
+            acc_hi.fill(0)
+            acc_lo.fill(0)
+            return end
+
+        for src_u, hi_u, lo_u in _fold_sorted_stream(sorted_stream,
+                                                     c_edges, dedup,
+                                                     use_kernel):
+            i = 0
+            while i < src_u.shape[0]:
+                wend = node_base + c_nodes
+                cut = int(np.searchsorted(src_u, wend, side="left"))
+                if cut > i:
+                    # src_u is strictly increasing, so the slice indices
+                    # are unique: plain fancy-indexed add (uint32 wrap)
+                    # beats the per-element np.add.at dispatch
+                    rows = src_u[i:cut] - node_base
+                    with np.errstate(over="ignore"):
+                        acc_hi[rows] += hi_u[i:cut]
+                        acc_lo[rows] += lo_u[i:cut]
+                    i = cut
+                if i < src_u.shape[0]:
+                    _finalize_window(node_base)
+                    node_base += c_nodes
+        while node_base < n:
+            _finalize_window(node_base)
+            node_base += c_nodes
+        pid_new_mm.flush()
+        store.close()
+        shutil.rmtree(it_dir, ignore_errors=True)
+
+        counts.append(next_pid)
+        pid_paths.append(_pid_path(j))
+        stats.append(IterationStats(
+            j, next_pid, time.perf_counter() - t0,
+            bytes_sorted=io.sort_bytes - s_sort0,
+            bytes_scanned=io.scan_bytes - s_scan0))
+        if early_stop and counts[-1] == counts[-2]:
+            converged_at = j
+            break
+
+    return OocBisimResult(
+        workdir=workdir, pid_paths=pid_paths, counts=counts, stats=stats,
+        io=io, converged_at=converged_at, k_requested=k, num_nodes=n)

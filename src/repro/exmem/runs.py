@@ -1,0 +1,212 @@
+"""External merge-sort over fixed-size on-disk runs (paper §3.1).
+
+The paper's algorithms are built from exactly two I/O primitives over
+disk-resident tables: `scan(X)` (stream a table once, sequentially) and
+`sort(X)` (external merge-sort: form sorted runs of memory size, then
+k-way merge).  This module is the generic implementation of `sort`:
+
+  * records are numpy *structured arrays*; a run is one ``.npy`` file of
+    records sorted by a lexicographic key (a tuple of field names, most
+    significant first).  Runs are read back memory-mapped, so the merge
+    touches only the pages of the blocks it buffers.
+  * `sort_to_runs` forms the runs: each incoming chunk (the memory budget)
+    is sorted in RAM with one `np.lexsort` and written out.
+  * `merge_runs` is the bounded-memory k-way merge: every live run buffers
+    ``budget_rows // k`` records; the *emit boundary* is the smallest
+    last-buffered key among runs that still have unbuffered records —
+    every buffered record ≤ the boundary is globally in final position, so
+    it can be emitted after one in-memory lexsort of the buffered prefixes.
+  * `external_sort` composes the two, collapsing run fan-in above
+    ``fan_in`` with intermediate merge passes (multi-pass external sort),
+    and yields the fully sorted stream chunk by chunk.
+
+`IOStats` mirrors the paper's cost accounting: `sort_cost` counts records
+pushed through sort passes (run formation + every merge pass + signature
+ranking), `scan_cost` counts records streamed sequentially, so a pipeline
+obeying `O(k·sort(|E_t|) + k·scan(|N_t|) + sort(|N_t|))` shows counters
+linear in k.  Byte counters track the actual file traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+from numpy.lib.format import open_memmap
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Record/byte counters for the paper's sort/scan cost model."""
+
+    sort_cost: int = 0      # records pushed through external-sort passes
+    scan_cost: int = 0      # records streamed sequentially
+    sort_bytes: int = 0
+    scan_bytes: int = 0
+    runs_written: int = 0
+    merge_passes: int = 0
+    spills: int = 0         # SpillableSigStore runs flushed to disk
+
+    def count_sort(self, records: int, nbytes: int) -> None:
+        self.sort_cost += int(records)
+        self.sort_bytes += int(nbytes)
+
+    def count_scan(self, records: int, nbytes: int) -> None:
+        self.scan_cost += int(records)
+        self.scan_bytes += int(nbytes)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def make_records(cols: dict) -> np.ndarray:
+    """Pack parallel 1-D columns into one structured record array."""
+    names = list(cols)
+    arrays = [np.asarray(cols[n]) for n in names]
+    n = arrays[0].shape[0]
+    if any(a.shape != (n,) for a in arrays):
+        raise ValueError("columns must be parallel 1-D arrays")
+    rec = np.empty(n, dtype=np.dtype([(nm, a.dtype)
+                                      for nm, a in zip(names, arrays)]))
+    for nm, a in zip(names, arrays):
+        rec[nm] = a
+    return rec
+
+
+def lexsort_records(rec: np.ndarray, keys: Sequence[str]) -> np.ndarray:
+    """Sort records by the lexicographic key (most significant first)."""
+    order = np.lexsort(tuple(rec[k] for k in reversed(keys)))
+    return rec[order]
+
+
+def _leq_bound(rec: np.ndarray, keys: Sequence[str], bound: tuple):
+    """Vectorized lexicographic `rec.key <= bound` mask."""
+    k0 = rec[keys[0]]
+    if len(keys) == 1:
+        return k0 <= bound[0]
+    return (k0 < bound[0]) | ((k0 == bound[0])
+                              & _leq_bound(rec, keys[1:], bound[1:]))
+
+
+def _last_key(buf: np.ndarray, keys: Sequence[str]) -> tuple:
+    return tuple(buf[k][-1] for k in keys)
+
+
+def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
+                 tmpdir: str, *, stats: Optional[IOStats] = None,
+                 prefix: str = "run") -> list:
+    """Run-formation pass: lexsort each chunk in memory, write one `.npy`
+    run per chunk. Returns the run paths (empty chunks are dropped)."""
+    os.makedirs(tmpdir, exist_ok=True)
+    paths = []
+    for i, chunk in enumerate(chunks):
+        if chunk.shape[0] == 0:
+            continue
+        rec = lexsort_records(chunk, keys)
+        path = os.path.join(tmpdir, f"{prefix}_{i:06d}.npy")
+        np.save(path, rec)
+        paths.append(path)
+        if stats is not None:
+            stats.count_sort(rec.shape[0], rec.nbytes)
+            stats.runs_written += 1
+    return paths
+
+
+def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
+               budget_rows: int = 1 << 16,
+               stats: Optional[IOStats] = None) -> Iterator[np.ndarray]:
+    """Bounded-memory k-way merge of sorted runs; yields sorted chunks of at
+    most ``budget_rows`` records. Total resident memory is one block of
+    ``budget_rows // k`` records per live run (runs are memory-mapped)."""
+    arrs = [np.load(p, mmap_mode="r") for p in paths]
+    arrs = [a for a in arrs if a.shape[0]]
+    if not arrs:
+        return
+    if stats is not None:
+        stats.merge_passes += 1
+    if len(arrs) == 1:
+        a = arrs[0]
+        for s in range(0, a.shape[0], budget_rows):
+            chunk = np.array(a[s:s + budget_rows])
+            if stats is not None:
+                stats.count_scan(chunk.shape[0], chunk.nbytes)
+            yield chunk
+        return
+    block = max(budget_rows // len(arrs), 1)
+    cur = [0] * len(arrs)
+    buf: list = [None] * len(arrs)
+    while True:
+        active = []
+        for i, a in enumerate(arrs):
+            if buf[i] is None or buf[i].shape[0] == 0:
+                if cur[i] < a.shape[0]:
+                    buf[i] = np.array(a[cur[i]:cur[i] + block])
+                    cur[i] += buf[i].shape[0]
+                else:
+                    buf[i] = None
+            if buf[i] is not None:
+                active.append(i)
+        if not active:
+            return
+        # Emit boundary: min last-buffered key among runs with unbuffered
+        # data left; runs fully in memory impose no bound.
+        bound = None
+        for i in active:
+            if cur[i] < arrs[i].shape[0]:
+                last = _last_key(buf[i], keys)
+                if bound is None or last < bound:
+                    bound = last
+        take = []
+        for i in active:
+            b = buf[i]
+            cnt = b.shape[0] if bound is None else int(
+                np.count_nonzero(_leq_bound(b, keys, bound)))
+            if cnt:
+                take.append(b[:cnt])
+                buf[i] = b[cnt:]
+        out = lexsort_records(np.concatenate(take), keys)
+        if stats is not None:
+            stats.count_sort(out.shape[0], out.nbytes)
+        yield out
+
+
+def _merge_to_file(paths: Sequence[str], keys: Sequence[str], out_path: str,
+                   *, budget_rows: int,
+                   stats: Optional[IOStats]) -> str:
+    total = sum(int(np.load(p, mmap_mode="r").shape[0]) for p in paths)
+    dtype = np.load(paths[0], mmap_mode="r").dtype
+    mm = open_memmap(out_path, mode="w+", dtype=dtype, shape=(total,))
+    pos = 0
+    for chunk in merge_runs(paths, keys, budget_rows=budget_rows,
+                            stats=stats):
+        mm[pos:pos + chunk.shape[0]] = chunk
+        pos += chunk.shape[0]
+    mm.flush()
+    del mm
+    for p in paths:
+        os.remove(p)
+    if stats is not None:
+        stats.runs_written += 1
+    return out_path
+
+
+def external_sort(chunks: Iterable[np.ndarray], keys: Sequence[str],
+                  tmpdir: str, *, budget_rows: int = 1 << 16,
+                  fan_in: int = 16,
+                  stats: Optional[IOStats] = None) -> Iterator[np.ndarray]:
+    """Full external sort: run formation, intermediate merge passes while
+    the fan-in exceeds ``fan_in``, then the final streaming merge."""
+    paths = sort_to_runs(chunks, keys, tmpdir, stats=stats)
+    level = 0
+    while len(paths) > fan_in:
+        merged = []
+        for gi in range(0, len(paths), fan_in):
+            group = paths[gi:gi + fan_in]
+            out = os.path.join(tmpdir, f"merge_{level}_{gi:06d}.npy")
+            merged.append(_merge_to_file(group, keys, out,
+                                         budget_rows=budget_rows,
+                                         stats=stats))
+        paths = merged
+        level += 1
+    yield from merge_runs(paths, keys, budget_rows=budget_rows, stats=stats)

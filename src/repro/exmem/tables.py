@@ -1,0 +1,153 @@
+"""Disk-resident N_t / E_t column tables (paper §2, Tables 2-3).
+
+`OocGraph` is the out-of-core sibling of `repro.graph.storage.Graph`: the
+same <N, E, lambda_N, lambda_E> data, but held as chunked ``.npy`` files in
+a directory so graph size is independent of RAM.  Exactly the layouts the
+paper's Algorithm 1 needs are materialized:
+
+  nodes/       N_t: `nLabel` records, chunk files of `chunk_nodes` rows
+  edges_tst/   E_tst: (sId, eLabel, tId) sorted by (sId, eLabel, tId)
+  edges_tts/   E_tts: (tId, sId, eLabel) sorted by (tId, sId)
+  meta.json    sizes + chunk geometry
+
+Chunks are iterated via memory-maps, so a scan's resident set is one chunk.
+`Graph.to_ooc()` / `OocGraph.to_memory()` convert between the two worlds;
+`save`/`load` give the directory format a stable on-disk identity.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.storage import Graph
+
+from .runs import IOStats
+
+NODE_DTYPE = np.dtype([("label", "<i4")])
+TST_DTYPE = np.dtype([("src", "<i4"), ("elabel", "<i4"), ("dst", "<i4")])
+TTS_DTYPE = np.dtype([("dst", "<i4"), ("src", "<i4"), ("elabel", "<i4")])
+
+_META = "meta.json"
+_FORMAT_VERSION = 1
+
+
+def _write_chunked(table_dir: str, rec: np.ndarray, chunk_rows: int) -> int:
+    os.makedirs(table_dir, exist_ok=True)
+    n_chunks = 0
+    for i, s in enumerate(range(0, rec.shape[0], chunk_rows)):
+        np.save(os.path.join(table_dir, f"chunk_{i:06d}.npy"),
+                rec[s:s + chunk_rows])
+        n_chunks += 1
+    return n_chunks
+
+
+class OocGraph:
+    """Chunked on-disk graph tables bound to a directory."""
+
+    def __init__(self, root: str):
+        self.root = root
+        with open(os.path.join(root, _META)) as f:
+            meta = json.load(f)
+        if meta.get("version") != _FORMAT_VERSION:
+            raise ValueError(f"unsupported OocGraph format: {meta}")
+        self.num_nodes = int(meta["num_nodes"])
+        self.num_edges = int(meta["num_edges"])
+        self.chunk_nodes = int(meta["chunk_nodes"])
+        self.chunk_edges = int(meta["chunk_edges"])
+        self.num_node_chunks = int(meta["num_node_chunks"])
+        self.num_edge_chunks = int(meta["num_edge_chunks"])
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_graph(cls, graph: Graph, root: str, *,
+                   chunk_nodes: int = 1 << 16,
+                   chunk_edges: int = 1 << 16) -> "OocGraph":
+        """Spill an in-memory `Graph` to chunked tables under `root`.
+
+        The in-memory edge columns are already in E_tst order (the Graph
+        canonical sort); E_tts is produced by one (dst, src) lexsort — for
+        graphs that never fit in memory the tables would instead be formed
+        by `runs.external_sort`, which the build pipeline also exercises.
+        """
+        if chunk_nodes < 1 or chunk_edges < 1:
+            raise ValueError("chunk sizes must be >= 1")
+        os.makedirs(root, exist_ok=True)
+        nodes = np.empty(graph.num_nodes, NODE_DTYPE)
+        nodes["label"] = graph.node_labels
+        n_node_chunks = _write_chunked(os.path.join(root, "nodes"), nodes,
+                                       chunk_nodes)
+        tst = np.empty(graph.num_edges, TST_DTYPE)
+        tst["src"], tst["elabel"], tst["dst"] = (graph.src, graph.elabel,
+                                                 graph.dst)
+        n_edge_chunks = _write_chunked(os.path.join(root, "edges_tst"), tst,
+                                       chunk_edges)
+        order = graph.in_order()  # (dst, src) sort: the E_tts copy
+        tts = np.empty(graph.num_edges, TTS_DTYPE)
+        tts["dst"], tts["src"], tts["elabel"] = (graph.dst[order],
+                                                 graph.src[order],
+                                                 graph.elabel[order])
+        _write_chunked(os.path.join(root, "edges_tts"), tts, chunk_edges)
+        meta = dict(version=_FORMAT_VERSION, num_nodes=graph.num_nodes,
+                    num_edges=graph.num_edges, chunk_nodes=chunk_nodes,
+                    chunk_edges=chunk_edges, num_node_chunks=n_node_chunks,
+                    num_edge_chunks=n_edge_chunks)
+        with open(os.path.join(root, _META), "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return cls(root)
+
+    # ------------------------------------------------------------------ IO
+    def save(self, path: str) -> None:
+        """Copy the table directory to `path` (must not exist)."""
+        shutil.copytree(self.root, path)
+
+    @classmethod
+    def load(cls, path: str) -> "OocGraph":
+        return cls(path)
+
+    # ------------------------------------------------------------ scanning
+    def _iter_table(self, name: str, n_chunks: int,
+                    stats: Optional[IOStats]) -> Iterator[np.ndarray]:
+        for i in range(n_chunks):
+            path = os.path.join(self.root, name, f"chunk_{i:06d}.npy")
+            chunk = np.array(np.load(path, mmap_mode="r"))
+            if stats is not None:
+                stats.count_scan(chunk.shape[0], chunk.nbytes)
+            yield chunk
+
+    def iter_nodes(self, stats: Optional[IOStats] = None
+                   ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yield (base_node_id, label_chunk) over N_t in node-id order."""
+        base = 0
+        for chunk in self._iter_table("nodes", self.num_node_chunks, stats):
+            yield base, chunk["label"]
+            base += chunk.shape[0]
+
+    def iter_edges_tst(self, stats: Optional[IOStats] = None
+                       ) -> Iterator[np.ndarray]:
+        """Scan E_tst: (src, elabel, dst) records sorted by (src,elabel,dst)."""
+        return self._iter_table("edges_tst", self.num_edge_chunks, stats)
+
+    def iter_edges_tts(self, stats: Optional[IOStats] = None
+                       ) -> Iterator[np.ndarray]:
+        """Scan E_tts: (dst, src, elabel) records sorted by (dst, src)."""
+        return self._iter_table("edges_tts", self.num_edge_chunks, stats)
+
+    # ---------------------------------------------------------- converters
+    def to_memory(self) -> Graph:
+        """Materialize as an in-memory `Graph` (inverse of `Graph.to_ooc`)."""
+        labels = np.concatenate(
+            [c for _, c in self.iter_nodes()]
+        ) if self.num_nodes else np.empty(0, np.int32)
+        if self.num_edges:
+            tst = np.concatenate(list(self.iter_edges_tst()))
+            src, elabel, dst = tst["src"], tst["elabel"], tst["dst"]
+        else:
+            src = dst = elabel = np.empty(0, np.int32)
+        # E_tst is already the Graph canonical order; construct directly
+        # (from_edges would re-sort and re-dedup identical data).
+        return Graph(labels, src, dst, elabel)

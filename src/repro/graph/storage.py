@@ -95,6 +95,14 @@ class Graph:
         z = np.load(path)
         return Graph(z["node_labels"], z["src"], z["dst"], z["elabel"])
 
+    def to_ooc(self, root: str, *, chunk_nodes: int = 1 << 16,
+               chunk_edges: int = 1 << 16):
+        """Spill to chunked on-disk N_t/E_t tables (`repro.exmem.OocGraph`);
+        inverse of `OocGraph.to_memory()`."""
+        from repro.exmem.tables import OocGraph  # avoid circular import
+        return OocGraph.from_graph(self, root, chunk_nodes=chunk_nodes,
+                                   chunk_edges=chunk_edges)
+
     # --------------------------------------------------------------- edits
     def with_edges_added(self, src, dst, elabel) -> "Graph":
         return Graph.from_edges(

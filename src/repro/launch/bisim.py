@@ -1,11 +1,13 @@
-"""Bisimulation launcher: run Build_Bisim (single or distributed) on a
-generated or saved graph.
+"""Bisimulation launcher: run Build_Bisim (single, distributed, or
+out-of-core) on a generated or saved graph.
 
     PYTHONPATH=src python -m repro.launch.bisim --generator powerlaw \
         --nodes 100000 --edges 400000 --k 10 --mode sorted
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.bisim --distributed \
         --ranking bucketed --generator structured --nodes 50000
+    PYTHONPATH=src python -m repro.launch.bisim --oocore \
+        --chunk-edges 65536 --generator structured --nodes 300000
 """
 from __future__ import annotations
 
@@ -49,14 +51,34 @@ def main() -> None:
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--ranking", default="allgather",
                     choices=["allgather", "bucketed"])
+    ap.add_argument("--oocore", action="store_true",
+                    help="disk-resident streamed build (repro.exmem)")
+    ap.add_argument("--chunk-edges", type=int, default=1 << 16,
+                    help="oocore: E_t chunk rows (memory budget)")
+    ap.add_argument("--chunk-nodes", type=int, default=None,
+                    help="oocore: N_t chunk rows (default: --chunk-edges)")
+    ap.add_argument("--spill-threshold", type=int, default=1 << 20,
+                    help="oocore: SigStore entries resident before spill")
+    ap.add_argument("--workdir", default=None,
+                    help="oocore: spill directory (default: a tempdir)")
     ap.add_argument("--no-early-stop", action="store_true")
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default=None,
+                    help="save pid history as .npz: one stacked 'pids' "
+                         "array, or per-level 'pids_<j>' members with "
+                         "--oocore (never materializes the full history)")
     args = ap.parse_args()
 
     g = make_graph(args)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
     t0 = time.perf_counter()
-    if args.distributed:
+    if args.oocore:
+        from repro.exmem import build_bisim_oocore
+        res = build_bisim_oocore(
+            g, args.k, mode=args.mode, chunk_edges=args.chunk_edges,
+            chunk_nodes=args.chunk_nodes, workdir=args.workdir,
+            spill_threshold=args.spill_threshold,
+            early_stop=not args.no_early_stop)
+    elif args.distributed:
         res = build_bisim_distributed(
             g, args.k, mode=args.mode, ranking=args.ranking,
             early_stop=not args.no_early_stop)
@@ -64,17 +86,38 @@ def main() -> None:
         res = build_bisim(g, args.k, mode=args.mode,
                           early_stop=not args.no_early_stop)
     dt = time.perf_counter() - t0
-    print(f"k={args.k} mode={args.mode} "
-          f"{'dist/' + args.ranking if args.distributed else 'single'}")
+    engine = ("oocore" if args.oocore else
+              "dist/" + args.ranking if args.distributed else "single")
+    print(f"k={args.k} mode={args.mode} {engine}")
     for st in res.stats:
         print(f"  iter {st.iteration:2d}: {st.num_partitions:9d} blocks "
               f"{st.seconds * 1e3:9.1f} ms  sortedB={st.bytes_sorted} "
               f"scannedB={st.bytes_scanned}")
     print(f"total {dt:.2f}s; converged_at={res.converged_at}")
+    if args.oocore:
+        io = res.io
+        print(f"io: sort_cost={io.sort_cost} scan_cost={io.scan_cost} "
+              f"sortB={io.sort_bytes} scanB={io.scan_bytes} "
+              f"runs={io.runs_written} merges={io.merge_passes} "
+              f"spills={io.spills}")
+        if args.workdir:
+            print(f"workdir: {res.workdir}")
     if args.out:
-        import numpy as np
-        np.savez_compressed(args.out, pids=res.pids)
+        if args.oocore:
+            # an .npz is a zip of .npy members: copy the per-level pid
+            # files straight in, never materializing the (k+1) x N
+            # history the out-of-core engine exists to avoid
+            import zipfile
+            with zipfile.ZipFile(args.out, "w",
+                                 zipfile.ZIP_DEFLATED) as zf:
+                for j, p in enumerate(res.pid_paths):
+                    zf.write(p, arcname=f"pids_{j}.npy")
+        else:
+            import numpy as np
+            np.savez_compressed(args.out, pids=res.pids)
         print(f"saved pid history to {args.out}")
+    if args.oocore and not args.workdir:
+        res.cleanup()  # tempdir workdir: don't strand the spilled tables
 
 
 if __name__ == "__main__":

@@ -1,0 +1,265 @@
+"""Out-of-core subsystem (repro.exmem): external merge-sort, OocGraph
+round-trips, spillable SigStore, and oocore-vs-in-memory equivalence."""
+import os
+
+import numpy as np
+import pytest
+from hypo_compat import given, settings, strategies as st
+
+from repro.core import SigStore, SpillableSigStore, build_bisim, same_partition
+from repro.exmem import (IOStats, OocGraph, build_bisim_oocore, external_sort,
+                         make_records, merge_runs, sort_to_runs)
+from repro.graph import generators as gen
+from repro.graph.storage import Graph, paper_example_graph
+
+MODES = ["sorted", "dedup_hash", "multiset"]
+
+
+# ------------------------------------------------------ external merge sort
+def _chunked(rec, rows):
+    return [rec[s:s + rows] for s in range(0, rec.shape[0], rows)]
+
+
+def _ext_sorted(rec, keys, tmpdir, chunk_rows, budget_rows=None):
+    out = list(external_sort(_chunked(rec, chunk_rows), keys, tmpdir,
+                             budget_rows=budget_rows or chunk_rows,
+                             fan_in=4, stats=IOStats()))
+    return (np.concatenate(out) if out
+            else np.empty(0, rec.dtype)), [c.shape[0] for c in out]
+
+
+@pytest.mark.parametrize("n,chunk", [(0, 8), (1, 8), (7, 3), (64, 8),
+                                     (1000, 64), (1000, 7), (257, 256)])
+def test_external_sort_matches_lexsort(tmp_path, n, chunk):
+    rng = np.random.default_rng(n * 31 + chunk)
+    rec = make_records(dict(
+        a=rng.integers(0, 9, n).astype(np.int32),
+        b=rng.integers(0, 5, n).astype(np.int32),
+        c=rng.integers(0, 1 << 20, n).astype(np.int32)))
+    got, sizes = _ext_sorted(rec, ("a", "b", "c"), str(tmp_path), chunk)
+    want = rec[np.lexsort((rec["c"], rec["b"], rec["a"]))]
+    np.testing.assert_array_equal(got, want)
+    assert all(s <= chunk for s in sizes)  # bounded-memory emission
+
+
+def test_external_sort_counts_io(tmp_path):
+    rng = np.random.default_rng(0)
+    rec = make_records(dict(a=rng.integers(0, 100, 500).astype(np.int32)))
+    stats = IOStats()
+    out = list(external_sort(_chunked(rec, 50), ("a",), str(tmp_path),
+                             budget_rows=50, fan_in=4, stats=stats))
+    np.testing.assert_array_equal(np.concatenate(out)["a"],
+                                  np.sort(rec["a"]))
+    # run formation (500) + intermediate merges (10 runs -> 3) + final merge
+    assert stats.sort_cost >= 2 * 500
+    assert stats.runs_written >= 10
+    assert stats.merge_passes >= 2
+
+
+def test_merge_runs_handles_skew(tmp_path):
+    """One run far longer than the others; duplicates across runs."""
+    a = make_records(dict(k=np.sort(np.arange(500, dtype=np.int64) % 7)))
+    b = make_records(dict(k=np.array([3, 3, 3], np.int64)))
+    c = make_records(dict(k=np.empty(0, np.int64)))
+    paths = sort_to_runs([a, b, c], ("k",), str(tmp_path))
+    merged = np.concatenate(list(merge_runs(paths, ("k",), budget_rows=16)))
+    np.testing.assert_array_equal(
+        merged["k"], np.sort(np.concatenate([a["k"], b["k"]])))
+
+
+@given(st.lists(st.integers(-1000, 1000), max_size=300),
+       st.integers(1, 50), st.integers(2, 40))
+@settings(max_examples=20)
+def test_external_sort_property(tmp_path_factory, xs, chunk, budget):
+    rec = make_records(dict(x=np.asarray(xs, np.int64)))
+    td = str(tmp_path_factory.mktemp("extsort"))
+    got, _ = _ext_sorted(rec, ("x",), td, chunk, budget_rows=budget)
+    np.testing.assert_array_equal(got["x"], np.sort(rec["x"]))
+
+
+# ------------------------------------------------------ OocGraph round-trips
+def test_graph_ooc_roundtrip(tmp_path):
+    g = gen.random_graph(150, 600, 3, 2, seed=7)
+    ooc = g.to_ooc(str(tmp_path / "ooc"), chunk_nodes=32, chunk_edges=64)
+    assert ooc.num_edge_chunks >= 4  # multi-chunk layout is exercised
+    g2 = ooc.to_memory()
+    np.testing.assert_array_equal(g.node_labels, g2.node_labels)
+    np.testing.assert_array_equal(g.src, g2.src)
+    np.testing.assert_array_equal(g.dst, g2.dst)
+    np.testing.assert_array_equal(g.elabel, g2.elabel)
+
+
+def test_ooc_save_load_matches_graph_save_load(tmp_path):
+    """The two persistence formats agree: .npz Graph <-> OocGraph dir."""
+    g = gen.structured_graph(40, seed=3)
+    g.save(str(tmp_path / "g.npz"))
+    ooc = g.to_ooc(str(tmp_path / "ooc"), chunk_nodes=16, chunk_edges=32)
+    ooc.save(str(tmp_path / "ooc_copy"))
+    a = Graph.load(str(tmp_path / "g.npz"))
+    b = OocGraph.load(str(tmp_path / "ooc_copy")).to_memory()
+    np.testing.assert_array_equal(a.node_labels, b.node_labels)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.elabel, b.elabel)
+    meta = OocGraph.load(str(tmp_path / "ooc_copy"))
+    assert (meta.num_nodes, meta.num_edges) == (g.num_nodes, g.num_edges)
+    assert (meta.chunk_nodes, meta.chunk_edges) == (16, 32)
+
+
+def test_ooc_edge_orders(tmp_path):
+    g = gen.random_graph(60, 240, 3, 2, seed=1)
+    ooc = g.to_ooc(str(tmp_path / "ooc"), chunk_edges=48)
+    io = IOStats()
+    tst = np.concatenate(list(ooc.iter_edges_tst(io)))
+    tts = np.concatenate(list(ooc.iter_edges_tts(io)))
+    assert io.scan_cost == 2 * g.num_edges
+    # E_tst sorted by (src, elabel, dst); E_tts by (dst, src)
+    assert (np.lexsort((tst["dst"], tst["elabel"], tst["src"]))
+            == np.arange(g.num_edges)).all()
+    assert (np.lexsort((tts["src"], tts["dst"]))
+            == np.arange(g.num_edges)).all()
+
+
+def test_ooc_empty_edges(tmp_path):
+    g = Graph(np.array([0, 1, 1], np.int32), np.empty(0, np.int32),
+              np.empty(0, np.int32), np.empty(0, np.int32))
+    ooc = g.to_ooc(str(tmp_path / "ooc"), chunk_nodes=2)
+    g2 = ooc.to_memory()
+    assert g2.num_nodes == 3 and g2.num_edges == 0
+
+
+# ------------------------------------------------------- spillable SigStore
+@pytest.mark.parametrize("seed", range(3))
+def test_spillable_matches_inmemory(tmp_path, seed):
+    rng = np.random.default_rng(seed)
+    mem = SigStore.empty()
+    sp = SpillableSigStore(spill_threshold=16,
+                           spill_dir=str(tmp_path / "spill"), max_runs=2)
+    nm = ns = 0
+    for _ in range(12):
+        keys = rng.integers(0, 400, rng.integers(1, 80)).astype(np.uint64)
+        a, nm = mem.get_or_assign(keys, nm)
+        b, ns = sp.get_or_assign(keys, ns)
+        np.testing.assert_array_equal(a, b)
+        assert nm == ns
+    assert len(sp) == len(mem)
+    assert sp.to_dict() == mem.to_dict()
+    keys, pids = sp.merged_arrays()
+    assert (keys[1:] > keys[:-1]).all()  # globally sorted, unique
+    np.testing.assert_array_equal(pids, mem.pids[
+        np.searchsorted(mem.keys, keys)])
+    sp.close()
+    assert os.listdir(str(tmp_path / "spill")) == []
+
+
+def test_spillable_spills_and_merges(tmp_path):
+    io = IOStats()
+    sp = SpillableSigStore(spill_threshold=8,
+                           spill_dir=str(tmp_path / "s"), max_runs=3,
+                           io=io)
+    nxt = 0
+    for s in range(0, 200, 10):
+        _, nxt = sp.get_or_assign(np.arange(s, s + 10, dtype=np.uint64),
+                                  nxt)
+    assert nxt == 200
+    assert io.spills > 0 and sp.num_spilled_runs <= 3 + 1
+    assert io.merge_passes > 0
+    # every key resolvable wherever it landed
+    out, found = sp.lookup(np.arange(200, dtype=np.uint64))
+    assert found.all()
+    np.testing.assert_array_equal(np.sort(out), np.arange(200))
+    # insert keeps existing pids across the disk runs
+    sp.insert(np.array([5, 1000], np.uint64), np.array([999, 7], np.int64))
+    assert sp.get(5) == 5 and sp.get(1000) == 7
+    # membership and materialization see the spilled runs too
+    assert 5 in sp and 12345 not in sp
+    cp = sp.slice_copy()
+    assert type(cp) is SigStore and len(cp) == len(sp)
+    assert cp.get(5) == 5 and cp.get(1000) == 7
+
+
+# --------------------------------------------- oocore vs in-memory engine
+GENERATORS = {
+    "random": lambda: gen.random_graph(120, 500, 3, 2, seed=2),
+    "powerlaw": lambda: gen.powerlaw_graph(100, 420, 2, 2, seed=3),
+    "dag": lambda: gen.random_dag(90, 360, 3, 2, seed=4),
+    "structured": lambda: gen.structured_graph(40, seed=5),
+    "dbest": lambda: gen.kary_tree(3, 4),
+    "dworst": lambda: gen.complete_graph(12),
+}
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", sorted(GENERATORS))
+def test_oocore_matches_inmemory(tmp_path, gname, mode):
+    g = GENERATORS[gname]()
+    k = 4
+    ref = build_bisim(g, k, mode=mode, early_stop=False)
+    res = build_bisim_oocore(g, k, mode=mode, chunk_edges=28,
+                             chunk_nodes=32, early_stop=False,
+                             workdir=str(tmp_path), spill_threshold=16)
+    ooc = OocGraph.load(os.path.join(str(tmp_path), "graph"))
+    assert ooc.num_edge_chunks >= 4  # chunking actually forced
+    assert res.counts == ref.counts
+    for j in range(k + 1):
+        assert same_partition(res.pids[j], ref.pids[j]), (gname, mode, j)
+    assert res.io.sort_cost > 0 and res.io.scan_cost > 0
+
+
+def test_oocore_paper_example(tmp_path):
+    res = build_bisim_oocore(paper_example_graph(), 2, chunk_edges=2,
+                             chunk_nodes=2, early_stop=False,
+                             workdir=str(tmp_path))
+    assert res.counts == [2, 4, 5]  # Table 1
+
+
+def test_oocore_kernel_routing_matches(tmp_path):
+    """use_kernel routes the chunk fold through repro.kernels.edge_hash;
+    identical results (same hash, different call-site)."""
+    g = gen.random_graph(80, 320, 3, 2, seed=8)
+    a = build_bisim_oocore(g, 3, chunk_edges=64, early_stop=False,
+                           workdir=str(tmp_path / "a"), use_kernel=True)
+    b = build_bisim_oocore(g, 3, chunk_edges=64, early_stop=False,
+                           workdir=str(tmp_path / "b"))
+    assert a.counts == b.counts
+    for j in range(4):
+        assert same_partition(a.pids[j], b.pids[j])
+
+
+def test_oocore_early_stop_and_pid_at(tmp_path):
+    g = gen.structured_graph(50, seed=0)
+    res = build_bisim_oocore(g, 10, chunk_edges=128, workdir=str(tmp_path))
+    ref = build_bisim(g, 10)
+    assert res.converged_at == ref.converged_at
+    assert res.k_effective == ref.pids.shape[0] - 1
+    # Change-k semantics past convergence
+    assert same_partition(res.pid_at(99), ref.pid_at(99))
+
+
+def test_oocore_counters_grow_linearly_in_k(tmp_path):
+    """The paper's O(k sort(E) + k scan(N)) shape: per-iteration deltas of
+    both counters are constant once early-stop is disabled."""
+    g = gen.random_graph(100, 400, 3, 2, seed=9)
+    costs = {}
+    for kk in (2, 4, 8):
+        res = build_bisim_oocore(g, kk, chunk_edges=64, early_stop=False,
+                                 workdir=str(tmp_path / f"k{kk}"))
+        costs[kk] = (res.io.sort_cost, res.io.scan_cost)
+    ds1 = costs[4][0] - costs[2][0]
+    ds2 = costs[8][0] - costs[4][0]
+    assert ds1 > 0 and ds2 == 2 * ds1  # sort_cost: +const per iteration
+    dc1 = costs[4][1] - costs[2][1]
+    dc2 = costs[8][1] - costs[4][1]
+    assert dc1 > 0 and dc2 == 2 * dc1  # scan_cost: +const per iteration
+
+
+def test_oocore_accepts_oocgraph_and_cleanup(tmp_path):
+    g = gen.random_graph(80, 300, 3, 2, seed=6)
+    ooc = g.to_ooc(str(tmp_path / "tables"), chunk_nodes=32, chunk_edges=64)
+    res = build_bisim_oocore(ooc, 3, early_stop=False,
+                             workdir=str(tmp_path / "work"))
+    ref = build_bisim(g, 3, early_stop=False)
+    assert res.counts == ref.counts
+    res.cleanup()
+    assert not os.path.exists(str(tmp_path / "work"))
+    assert os.path.exists(str(tmp_path / "tables"))  # caller's tables kept

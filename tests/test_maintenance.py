@@ -78,6 +78,67 @@ def test_delete_node():
     _check(m)
 
 
+def test_compact_remaps_and_matches_rebuild():
+    """compact() drops tombstoned rows, remaps ids densely, and the
+    maintained partition equals a fresh build on the compacted graph."""
+    g = gen.random_graph(30, 90, 3, 2, seed=11)
+    m = BisimMaintainer(g, 3)
+    for nid in (4, 17, 29):
+        m.delete_node(nid)
+    assert m.num_tombstones == 3
+    old_graph, old_pids = m.graph, [p.copy() for p in m.pids]
+    remap = m.compact()
+    assert m.num_tombstones == 0
+    assert m.graph.num_nodes == 27
+    assert (remap[[4, 17, 29]] == -1).all()
+    live = remap >= 0
+    # labels and pid history carried over row-for-row
+    np.testing.assert_array_equal(m.graph.node_labels,
+                                  old_graph.node_labels[live])
+    for j in range(m.k + 1):
+        np.testing.assert_array_equal(m.pids[j], old_pids[j][live])
+    _check(m)  # fresh rebuild on the compacted graph agrees
+    # maintenance keeps working on the remapped ids
+    m.add_edge(0, 0, 26)
+    m.add_nodes([1, 2])
+    _check(m)
+
+
+def test_compact_noop_and_reanimation():
+    m = BisimMaintainer(gen.random_graph(20, 50, 2, 2, seed=3), 2)
+    remap = m.compact()  # nothing tombstoned: identity, graph untouched
+    np.testing.assert_array_equal(remap, np.arange(20))
+    m.delete_node(5)
+    m.add_edge(5, 0, 6)  # an incident edge re-animates the tombstone
+    assert m.num_tombstones == 0
+    assert m.compact().shape[0] == 20 and m.graph.num_nodes == 20
+    _check(m)
+
+
+def test_rejected_insert_keeps_tombstone():
+    """An out-of-range add_edge must fail without re-animating tombstones
+    (numpy's negative-index wraparound would otherwise clear row N-1)."""
+    m = BisimMaintainer(gen.random_graph(20, 50, 2, 2, seed=3), 2)
+    m.delete_node(19)
+    with pytest.raises(ValueError):
+        m.add_edge(-1, 0, 3)
+    assert m.num_tombstones == 1
+    remap = m.compact()
+    assert m.graph.num_nodes == 19 and remap[19] == -1
+    _check(m)
+
+
+def test_delete_node_validates_id():
+    """Out-of-range delete_node must reject before mutating anything
+    (a negative id would wrap and tombstone a live row)."""
+    m = BisimMaintainer(gen.random_graph(20, 50, 2, 2, seed=3), 2)
+    for bad in (-1, 20):
+        with pytest.raises(ValueError):
+            m.delete_node(bad)
+    assert m.num_tombstones == 0 and m.graph.num_nodes == 20
+    _check(m)
+
+
 def test_rebuild_heuristic_triggers():
     """Dworst: adding a y edge to a complete graph floods the frontier ->
     the §4.2 switch-back heuristic must fire."""

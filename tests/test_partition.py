@@ -113,6 +113,27 @@ def test_dbest_dworst_shapes():
     assert all(c == 1 for c in res.counts)
 
 
+def test_sync_every_invariant():
+    """Batched early-stop checking (device-side flag drained every
+    sync_every iterations) returns the same result as per-iteration."""
+    for seed in (0, 1):
+        g = gen.random_graph(70, 220, 3, 2, seed=seed)
+        base = build_bisim(g, 50, early_stop=True, sync_every=1,
+                           with_store=True)
+        for se in (2, 5):
+            res = build_bisim(g, 50, early_stop=True, sync_every=se,
+                              with_store=True)
+            assert res.counts == base.counts
+            assert res.converged_at == base.converged_at
+            assert res.pids.shape == base.pids.shape
+            assert len(res.stores) == len(base.stores)
+            assert res.next_pid == base.next_pid
+            for j in range(res.pids.shape[0]):
+                assert same_partition(res.pids[j], base.pids[j])
+    with pytest.raises(ValueError):
+        build_bisim(paper_example_graph(), 2, sync_every=0)
+
+
 def test_kernel_mode_matches():
     """multiset mode routed through the kernels package == direct path."""
     g = gen.random_graph(80, 300, 3, 2, seed=3)

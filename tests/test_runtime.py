@@ -86,10 +86,7 @@ def test_compressed_psum_multidevice():
                         jnp.float32)
         def f(x):
             return compressed_psum(x, "d")
-        try:
-            shard_map = jax.shard_map
-        except AttributeError:
-            from jax.experimental.shard_map import shard_map
+        from repro.compat import shard_map
         y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d"),
                               out_specs=P("d")))(x)
         exact = jnp.mean(x, axis=0, keepdims=True).repeat(4, 0)
