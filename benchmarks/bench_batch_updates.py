@@ -1,7 +1,10 @@
 """Paper Fig. 11: batch updates (ADD_EDGES) vs single updates vs rebuild.
 
 Sweeps the number of edges updated at once and reports the crossover
-against Build_Bisim, as in §5.5.
+against Build_Bisim, as in §5.5.  The oocore rows run the same sweep
+through the disk-resident `OocBackend`: there the batch cost is dominated
+by the `sort(|E_t|)` table merge plus k sequential scans, so the per-edge
+cost collapses as the batch grows.
 """
 from __future__ import annotations
 
@@ -10,9 +13,18 @@ import time
 import numpy as np
 
 from repro.core import BisimMaintainer, build_bisim
+from repro.exmem import OocBackend, build_bisim_oocore
 from repro.graph.storage import Graph
 
 from .datasets import suite
+
+
+def _holdout_batch(g: Graph, rng, nedges: int) -> tuple:
+    idx = rng.choice(g.num_edges, size=nedges, replace=False)
+    keep = np.ones(g.num_edges, bool)
+    keep[idx] = False
+    gg = Graph(g.node_labels, g.src[keep], g.dst[keep], g.elabel[keep])
+    return gg, idx
 
 
 def run(scale: int = 1, k: int = 10):
@@ -20,11 +32,7 @@ def run(scale: int = 1, k: int = 10):
     for name, g in list(suite(scale).items())[:2]:
         rng = np.random.default_rng(1)
         for nedges in (1, 10, 100, 1000):
-            idx = rng.choice(g.num_edges, size=nedges, replace=False)
-            keep = np.ones(g.num_edges, bool)
-            keep[idx] = False
-            gg = Graph(g.node_labels, g.src[keep], g.dst[keep],
-                       g.elabel[keep])
+            gg, idx = _holdout_batch(g, rng, nedges)
             m = BisimMaintainer(gg, k)
             t0 = time.perf_counter()
             rep = m.add_edges(g.src[idx], g.elabel[idx], g.dst[idx])
@@ -36,4 +44,27 @@ def run(scale: int = 1, k: int = 10):
                 f"batch_updates/{name}/edges={nedges}", dt * 1e6,
                 f"rebuild_us={dt_build * 1e6:.0f};"
                 f"update_wins={dt < dt_build};rebuilt={rep.rebuilt}"))
+    # oocore sweep: first dataset, rebuild timed once (batch-independent)
+    name, g = next(iter(suite(scale).items()))
+    rng = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    build_bisim_oocore(g, k, chunk_edges=1 << 14).cleanup()
+    dt_build = time.perf_counter() - t0
+    for nedges in (1, 10, 100):
+        gg, idx = _holdout_batch(g, rng, nedges)
+        backend = OocBackend(gg, chunk_edges=1 << 14)
+        m = BisimMaintainer(backend, k)
+        io0 = (backend.io.sort_cost, backend.io.scan_cost)
+        t0 = time.perf_counter()
+        rep = m.add_edges(g.src[idx], g.elabel[idx], g.dst[idx])
+        dt = time.perf_counter() - t0
+        d_sort = backend.io.sort_cost - io0[0]
+        d_scan = backend.io.scan_cost - io0[1]
+        backend.close()
+        rows.append((
+            f"batch_updates/{name}/oocore_edges={nedges}", dt * 1e6,
+            f"rebuild_us={dt_build * 1e6:.0f};"
+            f"update_wins={dt < dt_build};rebuilt={rep.rebuilt};"
+            f"sort_delta={d_sort};scan_delta={d_scan};"
+            f"us_per_edge={dt * 1e6 / nedges:.0f}"))
     return rows

@@ -11,7 +11,8 @@ from .partition import (BisimResult, IterationStats, build_bisim,
                         partition_blocks, refines, same_partition)
 from .distributed import (ShardedGraph, build_bisim_distributed,
                           make_flat_mesh, shard_graph)
-from .maintenance import BisimMaintainer, MaintenanceReport
+from .maintenance import (BisimMaintainer, InMemoryBackend,
+                          MaintenanceBackend, MaintenanceReport)
 from .oracle import is_k_bisimilar, oracle_pids
 from .sig_store import SigStore, SpillableSigStore, fuse_key, label_key
 from . import hashes_np, signatures
@@ -19,7 +20,8 @@ from . import hashes_np, signatures
 __all__ = [
     "BisimResult", "IterationStats", "build_bisim", "partition_blocks",
     "refines", "same_partition", "ShardedGraph", "build_bisim_distributed",
-    "make_flat_mesh", "shard_graph", "BisimMaintainer", "MaintenanceReport",
+    "make_flat_mesh", "shard_graph", "BisimMaintainer", "InMemoryBackend",
+    "MaintenanceBackend", "MaintenanceReport",
     "is_k_bisimilar", "oracle_pids", "SigStore", "SpillableSigStore",
     "fuse_key", "label_key", "hashes_np", "signatures",
 ]

@@ -1,31 +1,38 @@
 """Maintenance of an existing k-bisimulation partition (paper §4, Alg. 2-4).
 
-State mirrors the paper's maintenance setup: the node table keeps the full
-pid history pId_0..pId_k (Table 3), both edge sort orders are available
-(CSR by src = E_tst, CSR by dst = E_tts), and the signature store S built
-during construction is kept and updated.
+The module is split into an *update-semantics core* and a *storage backend
+protocol*:
 
-The store is the array-backed ``SigStore`` (sig_store.py): per level one
-sorted u64 key column (fused ``hi << 32 | lo`` signature hash; level 0 the
-raw node label) and a parallel int64 pid column — the paper's sorted
-signature file S, shared verbatim with `build_bisim(with_store=True)`.
-Every per-level step is a batch array operation: the frontier's signatures
-come from the vectorized `node_signatures_batch` (CSR gather + segment
-combine), signature -> pid resolution is one bulk
-`SigStore.get_or_assign` (searchsorted + sorted merge of the novel run),
-and parent-frontier propagation is a vectorized gather over the in-CSR.
-No per-node Python loops remain on the propagation path.
+  * `BisimMaintainer` owns what the paper's Algorithms 2-4 actually say:
+    per-level frontier evolution (the STXXL priority queue of
+    (iteration, nId) pairs becomes processing frontier[j] level by level;
+    "propagate changes to pQueue", line 20 of Alg. 4, becomes
+    frontier[j+1] |= parents(changed)), tombstone bookkeeping for
+    DELETE_NODE, `compact`, the §4.2 switch-back-to-Build_Bisim heuristic
+    (`rebuild_threshold`), and Change-k.
 
-The STXXL priority queue of (iteration, nId) pairs becomes a per-level
-frontier set: dequeueing "all pairs with the smallest j" (line 11, Alg. 4)
-is exactly processing frontier[j] level by level; "propagate changes to
-pQueue" (line 20) becomes frontier[j+1] |= parents(changed).
+  * `MaintenanceBackend` is everything storage: where the pid history
+    pId_0..pId_k lives, how a frontier's out-edges are gathered, how
+    signatures resolve against the store S, and how graph mutations hit
+    the N_t/E_t tables.  Two implementations exist: `InMemoryBackend`
+    below (CSR arrays + array-backed `SigStore`, the fast path) and
+    `repro.exmem.maintenance.OocBackend` (chunked on-disk tables +
+    `SpillableSigStore`, sequential merge joins against the sorted
+    per-level pid files — maintenance for graphs that needed
+    `build_bisim_oocore`).
 
-The paper's §4.2 heuristic — switch back to Build_Bisim when most nodes end
-up in the queue — is the `rebuild_threshold` knob.
+The core is backend-agnostic: the same update stream over either backend
+yields identical partitions up to pid renaming, because both resolve the
+bit-identical signature hashes (`hashes_np` mirrors the JAX lanes) against
+per-level stores sharing one schema.
+
+Signature modes: the paper's set semantics (`sorted` / `dedup_hash`, which
+hash identically here) plus `multiset` — counting bisimulation, maintained
+by skipping the (eLabel, pId) dedup exactly as construction does.
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 from typing import Iterable, Optional
 
@@ -50,35 +57,164 @@ class MaintenanceReport:
 _csr_gather = hashes_np.csr_gather
 
 
-class BisimMaintainer:
-    """Holds a graph + its k-bisimulation partition and applies updates."""
+class MaintenanceBackend(abc.ABC):
+    """Storage contract between `BisimMaintainer` and its state.
 
-    def __init__(self, graph: Graph, k: int, *, mode: str = "sorted",
-                 rebuild_threshold: float = 0.5,
-                 result: Optional[BisimResult] = None):
-        if mode not in ("sorted", "dedup_hash"):
-            # multiset (counting) maintenance would need multiset stores;
-            # the paper's semantics is the set one, so we maintain that.
-            raise ValueError("maintenance supports set-semantics modes only")
-        self.k = k
-        self.mode = mode
-        self.rebuild_threshold = rebuild_threshold
+    A backend owns four things and nothing else:
+
+      graph tables   — N_t and both E_t sort orders, mutated by
+                       `add_node_rows` / `add_edge_rows` /
+                       `remove_edge_rows` / `compact`;
+      pid history    — one pId_j column per level, read and written
+                       through `pid_at` / `set_pid_at` / `pid_column` /
+                       `append_pid_rows`;
+      signature store — one store S_j per level (level 0 keyed by node
+                       label), consulted through `resolve`, which mints
+                       dense pids for novel signatures;
+      gathers        — `frontier_signatures` (sig_j hash pairs of a
+                       frontier from its out-edges and pId_{j-1}),
+                       `parents_of` (in-edge sources of changed nodes)
+                       and `incident_edges` (DELETE_NODE's edge set).
+
+    Every `nodes` argument below is a sorted, deduplicated int64 id array
+    (frontiers come from `np.unique`/`np.union1d`); out-of-core backends
+    rely on that ordering to turn pid-file accesses into sequential
+    merge joins.  Mutators must validate *before* mutating: a rejected
+    update (id out of range) must leave the backend untouched, because the
+    core's tombstone re-animation runs only after the backend accepts.
+
+    Besides the abstract methods, every backend exposes three pieces of
+    state after `build()` (annotated below; `BisimMaintainer` re-exports
+    them as properties): `graph` — the maintained graph, materialized on
+    demand by disk backends; `stores` — the per-level signature store
+    list; `next_pid` — the next free pid per level.  A backend holding
+    its pid history as live in-RAM arrays may additionally expose `pids`
+    (list of int64 columns), which the maintainer's `pids` property
+    returns directly instead of copying through `pid_column`.
+    """
+
+    graph: Graph        # maintained graph (disk backends: materialized)
+    stores: list        # signature store S_j per level
+    next_pid: list      # next free pid per level
+
+    # ------------------------------------------------------------ geometry
+    @property
+    @abc.abstractmethod
+    def num_nodes(self) -> int: ...
+
+    @property
+    @abc.abstractmethod
+    def num_edges(self) -> int: ...
+
+    # ------------------------------------------------------------- (re)build
+    @abc.abstractmethod
+    def build(self, k: int, mode: str, *,
+              result: Optional[BisimResult] = None) -> None:
+        """Full Build_Bisim of the current graph: k+1 pid levels + stores.
+        `result` optionally injects a pre-computed `with_store=True` build
+        (in-memory backend only)."""
+
+    # ---------------------------------------------------------- pid history
+    @abc.abstractmethod
+    def pid_column(self, j: int) -> np.ndarray:
+        """The full pId_j column (int64 [N]); in-memory backends return
+        their live array, disk backends a materialized copy."""
+
+    @abc.abstractmethod
+    def pid_at(self, j: int, nodes: np.ndarray) -> np.ndarray: ...
+
+    @abc.abstractmethod
+    def set_pid_at(self, j: int, nodes: np.ndarray,
+                   values: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def append_pid_rows(self, j: int, values: np.ndarray) -> None: ...
+
+    # ---------------------------------------------------------------- store
+    @abc.abstractmethod
+    def resolve(self, j: int, keys: np.ndarray) -> np.ndarray:
+        """Bulk get-or-assign against S_j (Alg. 4 lines 13-17): resolve
+        fused signature keys to pids, minting dense fresh pids for novel
+        keys in first-occurrence order."""
+
+    # -------------------------------------------------------------- gathers
+    @abc.abstractmethod
+    def frontier_signatures(self, j: int, frontier: np.ndarray, *,
+                            dedup: bool = True):
+        """(hi, lo) u32 sig_j hash pairs of `frontier` from its out-edges'
+        (eLabel, pId_{j-1}(tgt)) pairs and pId_0 — bit-identical to what
+        construction stored in S_j."""
+
+    @abc.abstractmethod
+    def parents_of(self, nodes: np.ndarray) -> np.ndarray:
+        """Sorted unique in-edge sources of `nodes` (uses E_tts)."""
+
+    @abc.abstractmethod
+    def incident_edges(self, nid: int):
+        """(src, elabel, dst) arrays of every edge touching node `nid`."""
+
+    # ------------------------------------------------------------ mutations
+    @abc.abstractmethod
+    def add_node_rows(self, labels: np.ndarray) -> int:
+        """Append isolated nodes to N_t; returns the first new node id."""
+
+    @abc.abstractmethod
+    def add_edge_rows(self, src, elabel, dst) -> None: ...
+
+    @abc.abstractmethod
+    def remove_edge_rows(self, src, elabel, dst) -> None: ...
+
+    @abc.abstractmethod
+    def compact(self, keep: np.ndarray, remap: np.ndarray) -> None:
+        """Drop the rows where ~keep from N_t, E_t and every pid level,
+        remapping edge endpoints with the (monotone) `remap`."""
+
+    # -------------------------------------------------------------- change k
+    @abc.abstractmethod
+    def truncate_k(self, new_k: int) -> None:
+        """Slice pid history and stores down to levels 0..new_k."""
+
+    @abc.abstractmethod
+    def extend_k(self, new_k: int, mode: str) -> None:
+        """Grow to new_k levels (extra Build_Bisim iterations on top of
+        the stored state, or a rebuild where that is the cheaper/only
+        option — the partition is identical either way)."""
+
+
+class InMemoryBackend(MaintenanceBackend):
+    """RAM-resident backend: `Graph` + CSR indexes, mutable int64 pid
+    columns, and the array-backed `SigStore` per level — shared verbatim
+    with `build_bisim(with_store=True)`.
+
+    Every gather is a batch array operation: frontier signatures come from
+    the vectorized `node_signatures_batch` machinery (CSR gather + segment
+    combine), resolution is one bulk `SigStore.get_or_assign`, and
+    parent propagation is a vectorized gather over the in-CSR.  No
+    per-node Python loops on the propagation path.
+    """
+
+    def __init__(self, graph: Graph):
         self.graph = graph
-        # delete_node leaves an isolated tombstone row (dense id space);
-        # compact() later drops the flagged rows and remaps ids.
-        self._tombstone = np.zeros(graph.num_nodes, dtype=bool)
-        self._build(result)
 
-    # ------------------------------------------------------------------
-    def _build(self, result: Optional[BisimResult] = None) -> None:
+    # ------------------------------------------------------------ geometry
+    @property
+    def num_nodes(self) -> int:
+        return self.graph.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.graph.num_edges
+
+    # ------------------------------------------------------------- (re)build
+    def build(self, k: int, mode: str, *,
+              result: Optional[BisimResult] = None) -> None:
         res = result if result is not None else build_bisim(
-            self.graph, self.k, mode=self.mode, early_stop=False,
-            with_store=True)
+            self.graph, k, mode=mode, early_stop=False, with_store=True)
         if res.stores is None:
             raise ValueError("BisimMaintainer needs with_store=True results")
         # pid history as mutable int64 (new pids can exceed int32 eventually)
         self.pids = [np.array(res.pids[j], dtype=np.int64)
-                     for j in range(self.k + 1)]
+                     for j in range(k + 1)]
         self.stores = res.stores     # list[SigStore]; [0] keyed by label
         self.next_pid = list(res.next_pid)
         self._refresh_indexes()
@@ -88,14 +224,162 @@ class BisimMaintainer:
         self.in_ord = self.graph.in_order()
         self.in_off = self.graph.in_offsets()
 
-    # ------------------------------------------------------------ queries
+    # ---------------------------------------------------------- pid history
+    def pid_column(self, j: int) -> np.ndarray:
+        return self.pids[j]
+
+    def pid_at(self, j: int, nodes: np.ndarray) -> np.ndarray:
+        return self.pids[j][nodes]
+
+    def set_pid_at(self, j: int, nodes: np.ndarray,
+                   values: np.ndarray) -> None:
+        self.pids[j][nodes] = values
+
+    def append_pid_rows(self, j: int, values: np.ndarray) -> None:
+        self.pids[j] = np.concatenate(
+            [self.pids[j], np.asarray(values, dtype=np.int64)])
+
+    # ---------------------------------------------------------------- store
+    def resolve(self, j: int, keys: np.ndarray) -> np.ndarray:
+        out, self.next_pid[j] = self.stores[j].get_or_assign(
+            keys, self.next_pid[j])
+        return out
+
+    # -------------------------------------------------------------- gathers
+    def frontier_signatures(self, j: int, frontier: np.ndarray, *,
+                            dedup: bool = True):
+        # gather only the frontier's out-edges (cost O(frontier edges),
+        # not O(|E|)) and resolve their targets' pId_{j-1}
+        pid_prev = self.pids[j - 1]
+        idx, seg = _csr_gather(self.out_off, frontier)
+        return hashes_np.signatures_from_edges(
+            self.pids[0][frontier], seg, self.graph.elabel[idx],
+            pid_prev[self.graph.dst[idx]], frontier.size, dedup=dedup)
+
+    def parents_of(self, nodes: np.ndarray) -> np.ndarray:
+        idx, _ = _csr_gather(self.in_off, nodes)
+        return np.unique(self.graph.src[self.in_ord[idx]]).astype(np.int64)
+
+    def incident_edges(self, nid: int):
+        g = self.graph
+        mask = (g.src == nid) | (g.dst == nid)
+        return g.src[mask], g.elabel[mask], g.dst[mask]
+
+    # ------------------------------------------------------------ mutations
+    def add_node_rows(self, labels: np.ndarray) -> int:
+        base = self.graph.num_nodes
+        self.graph = self.graph.with_nodes_added(labels)
+        self._refresh_indexes()
+        return base
+
+    def add_edge_rows(self, src, elabel, dst) -> None:
+        # Graph construction range-validates before this object is
+        # committed, so a rejected insert leaves the backend untouched.
+        self.graph = self.graph.with_edges_added(src, dst, elabel)
+        self._refresh_indexes()
+
+    def remove_edge_rows(self, src, elabel, dst) -> None:
+        self.graph = self.graph.with_edges_removed(src, dst, elabel)
+        self._refresh_indexes()
+
+    def compact(self, keep: np.ndarray, remap: np.ndarray) -> None:
+        g = self.graph
+        # delete_node removed incident edges; keep only live-endpoint edges
+        # anyway so a stale tombstone cannot corrupt the remap.
+        emask = keep[g.src] & keep[g.dst]
+        self.graph = Graph(
+            g.node_labels[keep],
+            remap[g.src[emask]].astype(np.int32),
+            remap[g.dst[emask]].astype(np.int32),
+            g.elabel[emask])  # monotone remap keeps (src,elabel,dst) order
+        for j in range(len(self.pids)):
+            self.pids[j] = self.pids[j][keep]
+        self._refresh_indexes()
+
+    # -------------------------------------------------------------- change k
+    def truncate_k(self, new_k: int) -> None:
+        self.pids = self.pids[: new_k + 1]
+        self.stores = self.stores[: new_k + 1]
+        self.next_pid = self.next_pid[: new_k + 1]
+
+    def extend_k(self, new_k: int, mode: str) -> None:
+        # run additional iterations bottom-up from the stored pId_k
+        from . import signatures as sig
+        import jax.numpy as jnp
+        cur_k = len(self.pids) - 1
+        pid0 = jnp.asarray(self.pids[0].astype(np.int32))
+        src = jnp.asarray(self.graph.src)
+        dst = jnp.asarray(self.graph.dst)
+        elab = jnp.asarray(self.graph.elabel)
+        pid_prev = jnp.asarray(self.pids[cur_k].astype(np.int32))
+        for j in range(cur_k + 1, new_k + 1):
+            hi, lo = sig.signature_hashes(
+                pid0, src, dst, elab, pid_prev,
+                num_nodes=self.graph.num_nodes, mode=mode)
+            pid_new, count = sig.dense_rank_pairs(hi, lo)
+            pid_np = np.asarray(pid_new)
+            self.stores.append(SigStore.from_hash_pairs(
+                np.asarray(hi), np.asarray(lo), pid_np))
+            self.next_pid.append(int(count))
+            self.pids.append(pid_np.astype(np.int64))
+            pid_prev = pid_new
+
+
+class BisimMaintainer:
+    """Holds a k-bisimulation partition and applies updates — the paper's
+    update semantics over any `MaintenanceBackend`.
+
+    Pass a `Graph` (wrapped in `InMemoryBackend`) or a ready backend such
+    as `repro.exmem.maintenance.OocBackend`.
+    """
+
+    def __init__(self, graph, k: int, *, mode: str = "sorted",
+                 rebuild_threshold: float = 0.5,
+                 result: Optional[BisimResult] = None):
+        if mode not in ("sorted", "dedup_hash", "multiset"):
+            raise ValueError(f"unknown signature mode: {mode}")
+        self.k = k
+        self.mode = mode
+        self.rebuild_threshold = rebuild_threshold
+        self.backend = (graph if isinstance(graph, MaintenanceBackend)
+                        else InMemoryBackend(graph))
+        # delete_node leaves an isolated tombstone row (dense id space);
+        # compact() later drops the flagged rows and remaps ids.
+        self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
+        self.backend.build(k, mode, result=result)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def graph(self) -> Graph:
+        """The maintained graph; out-of-core backends materialize a copy
+        (tests / small graphs only)."""
+        return self.backend.graph
+
+    @property
+    def pids(self) -> list:
+        """Per-level pid columns; live arrays for the in-memory backend."""
+        backend_pids = getattr(self.backend, "pids", None)
+        if backend_pids is not None:
+            return backend_pids
+        return [self.backend.pid_column(j) for j in range(self.k + 1)]
+
+    @property
+    def stores(self) -> list:
+        return self.backend.stores
+
+    @property
+    def next_pid(self) -> list:
+        return self.backend.next_pid
+
     def pid(self, j: Optional[int] = None) -> np.ndarray:
-        return self.pids[self.k if j is None else j]
+        return self.backend.pid_column(self.k if j is None else j)
 
     def result(self) -> BisimResult:
+        pids = [np.asarray(self.backend.pid_column(j), dtype=np.int64)
+                for j in range(self.k + 1)]
         return BisimResult(
-            pids=np.stack([p.astype(np.int64) for p in self.pids]),
-            counts=[len(np.unique(p)) for p in self.pids], stats=[],
+            pids=np.stack(pids),
+            counts=[len(np.unique(p)) for p in pids], stats=[],
             converged_at=None, k_requested=self.k)
 
     # ------------------------------------------------------- ADD_NODE(S)
@@ -106,18 +390,13 @@ class BisimMaintainer:
     def add_nodes(self, labels: Iterable[int]) -> list:
         """Algorithm 3: bulk insert isolated nodes (merge-join on labels)."""
         labels = np.asarray(list(labels), dtype=np.int32)
-        new_ids = list(range(self.graph.num_nodes,
-                             self.graph.num_nodes + labels.shape[0]))
-        self.graph = self.graph.with_nodes_added(labels)
+        base = self.backend.add_node_rows(labels)
+        new_ids = list(range(base, base + labels.shape[0]))
         self._tombstone = np.concatenate(
             [self._tombstone, np.zeros(labels.shape[0], dtype=bool)])
-        grow = np.zeros(labels.shape[0], dtype=np.int64)
-        for j in range(self.k + 1):
-            self.pids[j] = np.concatenate([self.pids[j], grow])
         # level 0: one bulk resolve of the label keys (merge-join on labels)
-        p0, self.next_pid[0] = self.stores[0].get_or_assign(
-            label_key(labels), self.next_pid[0])
-        self.pids[0][new_ids] = p0
+        p0 = self.backend.resolve(0, label_key(labels))
+        self.backend.append_pid_rows(0, p0)
         # sig_j of an isolated node is (pId_0, {}) for every j >= 1: the
         # empty-set combine is the identity (0, 0), so its hash only
         # depends on p0 — one vectorized hash_triple per level.
@@ -125,10 +404,7 @@ class BisimMaintainer:
         hi, lo = hashes_np.hash_triple(zero, zero, p0)
         keys = fuse_key(hi, lo)
         for j in range(1, self.k + 1):
-            pj, self.next_pid[j] = self.stores[j].get_or_assign(
-                keys, self.next_pid[j])
-            self.pids[j][new_ids] = pj
-        self._refresh_indexes()
+            self.backend.append_pid_rows(j, self.backend.resolve(j, keys))
         return new_ids
 
     # ------------------------------------------------------- ADD_EDGE(S)
@@ -137,13 +413,12 @@ class BisimMaintainer:
         src = np.atleast_1d(np.asarray(src, dtype=np.int32))
         dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
         elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
-        # construct (and so range-validate) the new graph before touching
-        # tombstones: a rejected insert must not re-animate anything
-        self.graph = self.graph.with_edges_added(src, dst, elabel)
+        # the backend range-validates before mutating, so a rejected
+        # insert must not re-animate anything
+        self.backend.add_edge_rows(src, elabel, dst)
         # an edge incident to a tombstoned node re-animates it
         self._tombstone[src] = False
         self._tombstone[dst] = False
-        self._refresh_indexes()
         return self._propagate(frontier0=np.unique(src))
 
     def add_edge(self, s: int, l: int, t: int) -> MaintenanceReport:
@@ -154,22 +429,17 @@ class BisimMaintainer:
         src = np.atleast_1d(np.asarray(src, dtype=np.int32))
         dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
         elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
-        self.graph = self.graph.with_edges_removed(src, dst, elabel)
-        self._refresh_indexes()
+        self.backend.remove_edge_rows(src, elabel, dst)
         return self._propagate(frontier0=np.unique(src))
 
     def delete_node(self, nid: int) -> MaintenanceReport:
         """Remove a node: first its incident edges, then the node row."""
-        if not 0 <= nid < self.graph.num_nodes:
+        if not 0 <= nid < self.backend.num_nodes:
             # reject before any mutation (negative ids would wrap around
             # and tombstone a live row)
             raise ValueError(f"node id out of range: {nid}")
-        g = self.graph
-        out_mask = g.src == nid
-        in_mask = g.dst == nid
-        rep = self.delete_edges(g.src[out_mask | in_mask],
-                                g.elabel[out_mask | in_mask],
-                                g.dst[out_mask | in_mask])
+        src, elabel, dst = self.backend.incident_edges(nid)
+        rep = self.delete_edges(src, elabel, dst)
         # The paper then drops the N_t row; we keep a tombstone (isolated
         # node) to preserve the dense id space until compact() runs.
         self._tombstone[nid] = True
@@ -177,7 +447,7 @@ class BisimMaintainer:
 
     def compact(self) -> np.ndarray:
         """Drop tombstoned rows: densely remap node ids, slice the pid
-        history, and rebuild both CSR copies (the deferred half of the
+        history, and rebuild the edge tables (the deferred half of the
         paper's DELETE_NODE, which removes the N_t row outright).
 
         Returns the old->new id map (int64 [old_N]; -1 for dropped rows).
@@ -189,20 +459,8 @@ class BisimMaintainer:
         remap[dead] = -1
         if not dead.any():
             return remap
-        keep = ~dead
-        g = self.graph
-        # delete_node removed incident edges; keep only live-endpoint edges
-        # anyway so a stale tombstone cannot corrupt the remap.
-        emask = keep[g.src] & keep[g.dst]
-        self.graph = Graph(
-            g.node_labels[keep],
-            remap[g.src[emask]].astype(np.int32),
-            remap[g.dst[emask]].astype(np.int32),
-            g.elabel[emask])  # monotone remap keeps (src,elabel,dst) order
-        for j in range(self.k + 1):
-            self.pids[j] = self.pids[j][keep]
-        self._tombstone = np.zeros(self.graph.num_nodes, dtype=bool)
-        self._refresh_indexes()
+        self.backend.compact(~dead, remap)
+        self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
         return remap
 
     @property
@@ -211,9 +469,9 @@ class BisimMaintainer:
 
     # ------------------------------------------------------- propagation
     def _propagate(self, frontier0: np.ndarray) -> MaintenanceReport:
-        n = self.graph.num_nodes
+        n = self.backend.num_nodes
         report = MaintenanceReport([], [], [])
-        pid0 = self.pids[0]
+        dedup = self.mode != "multiset"
         frontier = np.unique(frontier0).astype(np.int64)
         always = frontier.copy()  # (j, s) enqueued for every j (line 7-8)
         for j in range(1, self.k + 1):
@@ -224,22 +482,16 @@ class BisimMaintainer:
                 continue
             if frontier.size > self.rebuild_threshold * n:
                 # §4.2 heuristic: most nodes queued -> full rebuild is cheaper
-                self._build()
+                self.backend.build(self.k, self.mode)
                 report.rebuilt = True
                 return report
-            # gather only the frontier's out-edges (cost O(frontier edges),
-            # not O(|E|)) and resolve their targets' pId_{j-1}
-            pid_prev = self.pids[j - 1]
-            idx, seg = _csr_gather(self.out_off, frontier)
-            hi, lo = hashes_np.signatures_from_edges(
-                pid0[frontier], seg, self.graph.elabel[idx],
-                pid_prev[self.graph.dst[idx]], frontier.size)
+            hi, lo = self.backend.frontier_signatures(j, frontier,
+                                                      dedup=dedup)
             # one bulk resolve of the whole frontier against S_j
-            pj, self.next_pid[j] = self.stores[j].get_or_assign(
-                fuse_key(hi, lo), self.next_pid[j])
-            old = self.pids[j][frontier]
+            pj = self.backend.resolve(j, fuse_key(hi, lo))
+            old = self.backend.pid_at(j, frontier)
             changed_mask = old != pj
-            self.pids[j][frontier] = pj
+            self.backend.set_pid_at(j, frontier, pj)
             changed = frontier[changed_mask]
             report.nodes_checked.append(int(frontier.size))
             report.nodes_changed.append(int(changed.size))
@@ -247,10 +499,8 @@ class BisimMaintainer:
                 int(np.union1d(old[changed_mask], pj[changed_mask]).size))
             # propagate to parents of changed nodes (line 20; uses E_tts)
             if changed.size and j < self.k:
-                idx, _ = _csr_gather(self.in_off, changed)
-                parents = np.unique(
-                    self.graph.src[self.in_ord[idx]]).astype(np.int64)
-                frontier = np.union1d(parents, always)
+                frontier = np.union1d(self.backend.parents_of(changed),
+                                      always)
             else:
                 frontier = always.copy()
         return report
@@ -260,28 +510,7 @@ class BisimMaintainer:
         """§4 'Change k': decrease slices history; increase runs extra
         iterations of Algorithm 1 on top of the stored state."""
         if new_k <= self.k:
-            self.pids = self.pids[: new_k + 1]
-            self.stores = self.stores[: new_k + 1]
-            self.next_pid = self.next_pid[: new_k + 1]
-            self.k = new_k
-            return
-        # run additional iterations bottom-up from the stored pId_k
-        from . import signatures as sig
-        import jax.numpy as jnp
-        pid0 = jnp.asarray(self.pids[0].astype(np.int32))
-        src = jnp.asarray(self.graph.src)
-        dst = jnp.asarray(self.graph.dst)
-        elab = jnp.asarray(self.graph.elabel)
-        pid_prev = jnp.asarray(self.pids[self.k].astype(np.int32))
-        for j in range(self.k + 1, new_k + 1):
-            hi, lo = sig.signature_hashes(
-                pid0, src, dst, elab, pid_prev,
-                num_nodes=self.graph.num_nodes, mode=self.mode)
-            pid_new, count = sig.dense_rank_pairs(hi, lo)
-            pid_np = np.asarray(pid_new)
-            self.stores.append(SigStore.from_hash_pairs(
-                np.asarray(hi), np.asarray(lo), pid_np))
-            self.next_pid.append(int(count))
-            self.pids.append(pid_np.astype(np.int64))
-            pid_prev = pid_new
+            self.backend.truncate_k(new_k)
+        else:
+            self.backend.extend_k(new_k, self.mode)
         self.k = new_k

@@ -31,6 +31,8 @@ import os
 
 import numpy as np
 
+from .kway import merge_sorted_sources
+
 _U64 = np.uint64
 _SHIFT = np.uint64(32)
 
@@ -282,20 +284,19 @@ class SpillableSigStore(SigStore):
         Keys are globally unique across runs, so the merged run is strictly
         sorted and pid payloads ride along unchanged.
 
-        Deliberately NOT `exmem.runs.merge_runs`: that operates on
-        structured record files, whose per-field views are strided —
-        `np.searchsorted` over a strided mmap copies the whole column, so
-        lookups would load every run into RAM.  The two parallel
-        contiguous files keep probes at O(log) page touches, at the cost
-        of this dedicated single-key merge.
+        The merge loop is `core.kway.merge_sorted_sources` over (keys,
+        pids) column pairs — the same emit-boundary core `exmem.runs` uses
+        for record files.  The runs stay as two parallel *contiguous*
+        files (not structured records) so `np.searchsorted` probes touch
+        O(log) pages instead of copying a strided column.
         """
         from numpy.lib.format import open_memmap
         by_size = sorted(self._runs, key=lambda r: r[2])
         victims = by_size[:self.max_runs]
         survivors = by_size[self.max_runs:]
-        srcs = [(np.load(kp, mmap_mode="r"), np.load(pp, mmap_mode="r"), ln)
-                for kp, pp, ln in victims]
-        total = sum(ln for _, _, ln in srcs)
+        srcs = [(np.load(kp, mmap_mode="r"), np.load(pp, mmap_mode="r"))
+                for kp, pp, _ in victims]
+        total = sum(ln for _, _, ln in victims)
         out_kp = os.path.join(self.spill_dir,
                               f"run_{self._run_seq:06d}.keys.npy")
         out_pp = os.path.join(self.spill_dir,
@@ -303,46 +304,11 @@ class SpillableSigStore(SigStore):
         self._run_seq += 1
         mk = open_memmap(out_kp, mode="w+", dtype=_U64, shape=(total,))
         mp = open_memmap(out_pp, mode="w+", dtype=np.int64, shape=(total,))
-        block = max(budget_rows // max(len(srcs), 1), 1)
-        cur = [0] * len(srcs)
-        bufk: list = [None] * len(srcs)
-        bufp: list = [None] * len(srcs)
         pos = 0
-        while True:
-            active = []
-            for i, (rk, rp, ln) in enumerate(srcs):
-                if bufk[i] is None or bufk[i].shape[0] == 0:
-                    if cur[i] < ln:
-                        bufk[i] = np.array(rk[cur[i]:cur[i] + block])
-                        bufp[i] = np.array(rp[cur[i]:cur[i] + block])
-                        cur[i] += bufk[i].shape[0]
-                    else:
-                        bufk[i] = bufp[i] = None
-                if bufk[i] is not None:
-                    active.append(i)
-            if not active:
-                break
-            bound = None
-            for i in active:
-                if cur[i] < srcs[i][2]:
-                    last = bufk[i][-1]
-                    if bound is None or last < bound:
-                        bound = last
-            tk, tp = [], []
-            for i in active:
-                cnt = (bufk[i].shape[0] if bound is None
-                       else int(np.searchsorted(bufk[i], bound,
-                                                side="right")))
-                if cnt:
-                    tk.append(bufk[i][:cnt])
-                    tp.append(bufp[i][:cnt])
-                    bufk[i] = bufk[i][cnt:]
-                    bufp[i] = bufp[i][cnt:]
-            ck = np.concatenate(tk)
-            cp = np.concatenate(tp)
-            order = np.argsort(ck, kind="stable")
-            mk[pos:pos + ck.shape[0]] = ck[order]
-            mp[pos:pos + cp.shape[0]] = cp[order]
+        for ck, cp in merge_sorted_sources(srcs, num_key_cols=1,
+                                           budget_rows=budget_rows):
+            mk[pos:pos + ck.shape[0]] = ck
+            mp[pos:pos + cp.shape[0]] = cp
             pos += ck.shape[0]
         mk.flush()
         mp.flush()

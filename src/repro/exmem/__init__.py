@@ -1,21 +1,27 @@
-"""External-memory subsystem: graph size independent of RAM (paper §3).
+"""External-memory subsystem: graph size independent of RAM (paper §3-§4).
 
 The source paper's contribution is an *I/O-efficient* k-bisimulation
-algorithm whose cost is `O(k·sort(|E_t|) + k·scan(|N_t|) + sort(|N_t|))`
-over disk-resident tables.  This package is the reproduction of that
-regime; each module maps onto a Section-3 construct:
+algorithm whose construction cost is `O(k·sort(|E_t|) + k·scan(|N_t|) +
+sort(|N_t|))` over disk-resident tables, with maintenance under updates in
+`O(k·sort(|E_t|) + k·sort(|N_t|))`.  This package is the reproduction of
+that regime; each module maps onto a paper construct:
 
   runs.py    §3.1's two I/O primitives. `external_sort` is `sort(X)`:
              run formation over memory-sized chunks plus a bounded-budget
-             k-way merge of memory-mapped `.npy` runs; `IOStats` is the
-             cost model itself (`sort_cost`/`scan_cost` record counters
-             plus byte traffic).
+             k-way merge of memory-mapped `.npy` runs (the emit-boundary
+             merge loop itself is `repro.core.kway`, shared with the
+             spillable store and the table updates); `IOStats` is the
+             cost model (`sort_cost`/`scan_cost` record counters plus
+             byte traffic); `rebuffer` keeps runs budget-sized.
 
   tables.py  §2 Tables 2-3. `OocGraph` holds N_t and E_t as chunked
              on-disk column tables in the two sort orders Algorithm 1
              consumes: E_tst by (sId, eLabel, tId) and E_tts by
              (tId, sId).  `Graph.to_ooc()` / `OocGraph.to_memory()`
-             convert; `save`/`load` fix the directory format.
+             convert; `save`/`load` fix the directory format.  The
+             tables are maintainable in place: `append_nodes`,
+             `insert_edges` (kway merge), `delete_edges` and
+             `compact_rows` (filtered scans).
 
   build.py   §3.2 Algorithm 1 as a streamed pipeline
              (`build_bisim_oocore`): sequential merge join of E_tts
@@ -25,17 +31,33 @@ regime; each module maps onto a Section-3 construct:
              (lines 13-15), and global ranking through a
              `SpillableSigStore` — `core.sig_store`'s §3.2 sorted
              signature file S with spill-to-disk runs (lines 16-18).
+             ``keep_stores=True`` hands the per-level stores to the
+             maintenance backend instead of deleting them.
+
+  maintenance.py  §4 out-of-core. `OocBackend` implements the
+             `repro.core.maintenance.MaintenanceBackend` storage
+             protocol — the contract `BisimMaintainer` programs against:
+             a backend owns the graph tables (mutations validate, then
+             rewrite), the per-level pid columns (`pid_at`/`set_pid_at`/
+             `append_pid_rows` over the build's pid files, accessed as
+             windowed sequential merge joins for sorted frontiers), the
+             per-level store S (`resolve` = bulk get-or-assign), and the
+             topology gathers (`frontier_signatures`, `parents_of`,
+             `incident_edges`).  The same update stream over `OocBackend`
+             and the in-memory backend yields identical partitions up to
+             pid renaming; `IOStats` counters stay linear in k per batch.
 
 Partitions are identical (up to pid renaming) to the in-memory
-`repro.core.build_bisim` in every signature mode.
+`repro.core` engines in every signature mode.
 """
 from .build import OocBisimResult, build_bisim_oocore
+from .maintenance import OocBackend
 from .runs import (IOStats, external_sort, lexsort_records, make_records,
-                   merge_runs, sort_to_runs)
-from .tables import OocGraph
+                   merge_runs, rebuffer, sort_to_runs)
+from .tables import ChunkedColumn, OocGraph
 
 __all__ = [
-    "OocBisimResult", "build_bisim_oocore", "IOStats", "external_sort",
-    "lexsort_records", "make_records", "merge_runs", "sort_to_runs",
-    "OocGraph",
+    "OocBisimResult", "build_bisim_oocore", "OocBackend", "IOStats",
+    "external_sort", "lexsort_records", "make_records", "merge_runs",
+    "rebuffer", "sort_to_runs", "ChunkedColumn", "OocGraph",
 ]

@@ -70,6 +70,11 @@ class OocBisimResult:
     converged_at: Optional[int]
     k_requested: int
     num_nodes: int
+    # with keep_stores=True: the per-level SpillableSigStore (spill dirs
+    # under workdir/stores) and the next-free pid per level — what the
+    # out-of-core maintenance backend adopts
+    stores: Optional[list] = None
+    next_pids: Optional[list] = None
     _pids_cache: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -197,13 +202,22 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
                        early_stop: bool = True,
                        workdir: Optional[str] = None,
                        spill_threshold: int = 1 << 20,
-                       use_kernel: bool = False) -> OocBisimResult:
+                       use_kernel: bool = False,
+                       keep_stores: bool = False,
+                       stats: Optional[IOStats] = None) -> OocBisimResult:
     """Out-of-core Build_Bisim. Accepts an in-memory `Graph` (spilled to
     chunked tables first) or an `OocGraph` (whose chunk geometry wins).
 
     mode: 'sorted' / 'dedup_hash' (set semantics, identical partitions) or
     'multiset' (counting bisimulation; dedup pass skipped). Partitions are
     identical, up to pid renaming, to `build_bisim` in the same mode.
+
+    keep_stores=True retains every level's `SpillableSigStore` (spill dirs
+    under ``workdir/stores``) on the result instead of deleting them with
+    the per-iteration scratch — required by the maintenance backend, which
+    keeps resolving new signatures against S after the build.  `stats`
+    threads an external `IOStats` so callers accumulating cross-build
+    counters (maintenance again) see the build's costs too.
     """
     if mode not in ("sorted", "dedup_hash", "multiset"):
         raise ValueError(f"unknown signature mode: {mode}")
@@ -217,7 +231,7 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
             graph, k, mode=mode, dedup=dedup, chunk_edges=chunk_edges,
             chunk_nodes=chunk_nodes, early_stop=early_stop,
             workdir=workdir, spill_threshold=spill_threshold,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, keep_stores=keep_stores, stats=stats)
     except BaseException:
         if owns_workdir:
             # a failed build must not strand GBs of spilled tables in a
@@ -230,8 +244,9 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
                   dedup: bool, chunk_edges: int,
                   chunk_nodes: Optional[int], early_stop: bool,
                   workdir: str, spill_threshold: int,
-                  use_kernel: bool) -> OocBisimResult:
-    io = IOStats()
+                  use_kernel: bool, keep_stores: bool = False,
+                  stats: Optional[IOStats] = None) -> OocBisimResult:
+    io = stats if stats is not None else IOStats()
     if isinstance(graph, Graph):
         ooc = OocGraph.from_graph(
             graph, os.path.join(workdir, "graph"),
@@ -241,14 +256,24 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
     n = ooc.num_nodes
     c_edges = ooc.chunk_edges
     c_nodes = ooc.chunk_nodes
+    kept_stores: list = []
 
     def _pid_path(j: int) -> str:
         return os.path.join(workdir, f"pid_{j:03d}.npy")
 
-    def _new_store(it_dir: str) -> SpillableSigStore:
+    def _new_store(it_dir: str, j: int) -> SpillableSigStore:
+        # kept stores outlive the per-iteration scratch dir: their spill
+        # runs go under workdir/stores and survive the it_dir rmtree
+        spill_dir = (os.path.join(workdir, "stores", f"lvl_{j:03d}")
+                     if keep_stores else os.path.join(it_dir, "store"))
         return SpillableSigStore(
-            spill_threshold=spill_threshold,
-            spill_dir=os.path.join(it_dir, "store"), io=io)
+            spill_threshold=spill_threshold, spill_dir=spill_dir, io=io)
+
+    def _retire_store(store: SpillableSigStore) -> None:
+        if keep_stores:
+            kept_stores.append(store)
+        else:
+            store.close()
 
     # ---------------------------------------------------- iteration 0
     # Rank node labels into pId_0, streaming N_t chunk by chunk through
@@ -256,7 +281,7 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
     t0 = time.perf_counter()
     s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
     it_dir = os.path.join(workdir, "it000")
-    store = _new_store(it_dir)
+    store = _new_store(it_dir, 0)
     pid_mm = open_memmap(_pid_path(0), mode="w+", dtype=np.int32,
                          shape=(n,))
     next_pid = 0
@@ -266,12 +291,12 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         pid_mm[base:base + labels.shape[0]] = pids_chunk.astype(np.int32)
         io.count_sort(labels.shape[0], labels.shape[0] * 4)  # ranking
     pid_mm.flush()
-    store.close()
+    _retire_store(store)
     shutil.rmtree(it_dir, ignore_errors=True)
     counts = [next_pid]
-    stats = [IterationStats(0, next_pid, time.perf_counter() - t0,
-                            bytes_sorted=io.sort_bytes - s_sort0,
-                            bytes_scanned=io.scan_bytes - s_scan0)]
+    it_stats = [IterationStats(0, next_pid, time.perf_counter() - t0,
+                               bytes_sorted=io.sort_bytes - s_sort0,
+                               bytes_scanned=io.scan_bytes - s_scan0)]
     pid_paths = [_pid_path(0)]
 
     pid0_mm = np.load(_pid_path(0), mmap_mode="r")
@@ -283,14 +308,20 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         os.makedirs(it_dir, exist_ok=True)
         pid_prev_mm = np.load(pid_paths[-1], mmap_mode="r")
 
-        # stages 1+2: join then external re-sort into (src, elabel, pid)
+        # stages 1+2: join then external re-sort into (src, elabel, pid).
+        # The join emits one sliver per pid window — far below the budget
+        # on sparse N >> E graphs — so rebuffer to full chunk_edges-sized
+        # chunks first: every formed run is budget-sized and the merge
+        # fan-in stays at ceil(|E_t| / chunk_edges).
         sorted_stream = runs_mod.external_sort(
-            _joined_chunks(ooc, pid_prev_mm, c_nodes, io), _JOIN_KEYS,
+            runs_mod.rebuffer(
+                _joined_chunks(ooc, pid_prev_mm, c_nodes, io), c_edges),
+            _JOIN_KEYS,
             os.path.join(it_dir, "sort"), budget_rows=c_edges, stats=io)
         io.count_scan(n, n * 4)  # the pid_{j-1} file scan of the join
 
         # stages 3+4: device fold + streamed ranking in node order
-        store = _new_store(it_dir)
+        store = _new_store(it_dir, j)
         pid_new_mm = open_memmap(_pid_path(j), mode="w+", dtype=np.int32,
                                  shape=(n,))
         acc_hi = np.zeros(c_nodes, np.uint32)
@@ -336,12 +367,12 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
             _finalize_window(node_base)
             node_base += c_nodes
         pid_new_mm.flush()
-        store.close()
+        _retire_store(store)
         shutil.rmtree(it_dir, ignore_errors=True)
 
         counts.append(next_pid)
         pid_paths.append(_pid_path(j))
-        stats.append(IterationStats(
+        it_stats.append(IterationStats(
             j, next_pid, time.perf_counter() - t0,
             bytes_sorted=io.sort_bytes - s_sort0,
             bytes_scanned=io.scan_bytes - s_scan0))
@@ -350,5 +381,7 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
             break
 
     return OocBisimResult(
-        workdir=workdir, pid_paths=pid_paths, counts=counts, stats=stats,
-        io=io, converged_at=converged_at, k_requested=k, num_nodes=n)
+        workdir=workdir, pid_paths=pid_paths, counts=counts, stats=it_stats,
+        io=io, converged_at=converged_at, k_requested=k, num_nodes=n,
+        stores=kept_stores if keep_stores else None,
+        next_pids=list(counts) if keep_stores else None)

@@ -1,0 +1,318 @@
+"""Out-of-core maintenance backend: paper §4 over disk-resident tables.
+
+`OocBackend` implements `repro.core.maintenance.MaintenanceBackend` for
+graphs that needed `build_bisim_oocore` in the first place: the N_t/E_t
+tables stay chunked on disk (`OocGraph`), the pid history pId_0..pId_k
+stays in the per-level ``.npy`` files the build wrote, and the signature
+store S stays a `SpillableSigStore` per level (kept alive across updates
+via the build's ``keep_stores=True``).
+
+The access discipline honors the paper's I/O bounds per update batch:
+
+  * graph mutations are the `OocGraph` table rewrites — insertion is a
+    2-way emit-boundary merge through the shared `core.kway` core
+    (`O(sort(|E_t|))`), deletion and compaction are filtered scans;
+  * `frontier_signatures` *streams* the frontier's out-edges from one
+    sequential E_tst scan, then resolves pId_{j-1}(tgt) by sorting the
+    selected edges by target and merge-joining them against the pid file
+    in windowed sequential reads — zero random pid accesses — before the
+    same dedup + segment wrap-sum hash the in-memory engine uses
+    (bit-identical signatures, so both backends agree up to renaming);
+  * `parents_of` is one sequential E_tts scan;
+  * pid reads/writes for a (sorted) frontier are windowed sequential
+    passes over the level's file.
+
+Every pass charges `IOStats` (`self.io`): per update batch the counters
+grow by one `sort(|E_t|)` (table maintenance) plus k sequential E_t/N_t
+scans and k frontier-sized sorts — within the paper's
+`O(k·sort(|E_t|) + k·sort(|N_t|))` maintenance bound, and linear in k
+(asserted by tests).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Optional, Union
+
+import numpy as np
+from numpy.lib.format import open_memmap
+
+from repro.core import hashes_np
+from repro.core.maintenance import MaintenanceBackend
+from repro.graph.storage import Graph
+
+from .build import build_bisim_oocore
+from .runs import IOStats
+from .tables import TST_DTYPE, OocGraph
+
+
+class OocBackend(MaintenanceBackend):
+    """Disk-resident `MaintenanceBackend` over `OocGraph` tables.
+
+    Accepts an in-memory `Graph` (spilled into the workdir) or an
+    `OocGraph` (copied into the workdir — maintenance mutates its
+    tables, the caller's directory stays intact).  `workdir=None` uses a
+    tempdir that `close()` removes.
+    """
+
+    def __init__(self, graph: Union[Graph, OocGraph], *,
+                 workdir: Optional[str] = None,
+                 chunk_edges: int = 1 << 16,
+                 chunk_nodes: Optional[int] = None,
+                 spill_threshold: int = 1 << 20):
+        self.io = IOStats()
+        self._owns_workdir = workdir is None
+        if workdir is None:
+            workdir = tempfile.mkdtemp(prefix="ooc-maint-")
+        os.makedirs(workdir, exist_ok=True)
+        self.workdir = workdir
+        graph_dir = os.path.join(workdir, "graph")
+        if isinstance(graph, OocGraph):
+            if os.path.abspath(graph.root) != os.path.abspath(graph_dir):
+                shutil.rmtree(graph_dir, ignore_errors=True)
+                graph.save(graph_dir)
+            self.ooc = OocGraph(graph_dir)
+        else:
+            self.ooc = graph.to_ooc(
+                graph_dir, chunk_nodes=chunk_nodes or chunk_edges,
+                chunk_edges=chunk_edges)
+        self.spill_threshold = spill_threshold
+        self.stores: Optional[list] = None
+        self.next_pid: Optional[list] = None
+        self.pid_paths: list = []
+        self._pid_mms: dict = {}
+        self._build_dir: Optional[str] = None
+        self._build_seq = 0
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def num_nodes(self) -> int:
+        return self.ooc.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.ooc.num_edges
+
+    @property
+    def graph(self) -> Graph:
+        """Materialized in-memory copy (tests / small graphs only)."""
+        return self.ooc.to_memory()
+
+    # ------------------------------------------------------------- (re)build
+    def build(self, k: int, mode: str, *, result=None) -> None:
+        if result is not None:
+            raise ValueError(
+                "OocBackend builds its own state; `result` injection is "
+                "an InMemoryBackend feature")
+        self._dispose_build()
+        bdir = os.path.join(self.workdir, f"build_{self._build_seq:03d}")
+        self._build_seq += 1
+        res = build_bisim_oocore(
+            self.ooc, k, mode=mode, early_stop=False, workdir=bdir,
+            spill_threshold=self.spill_threshold, keep_stores=True,
+            stats=self.io)
+        self.pid_paths = list(res.pid_paths)
+        self.stores = res.stores
+        self.next_pid = list(res.next_pids)
+        self._build_dir = bdir
+
+    def _dispose_build(self) -> None:
+        if self.stores:
+            for s in self.stores:
+                s.close()
+        self.stores = None
+        self._pid_mms.clear()
+        if self._build_dir is not None:
+            shutil.rmtree(self._build_dir, ignore_errors=True)
+            self._build_dir = None
+
+    def close(self) -> None:
+        """Release stores, pid files, and (if owned) the workdir."""
+        self._dispose_build()
+        if self._owns_workdir:
+            shutil.rmtree(self.workdir, ignore_errors=True)
+
+    # ---------------------------------------------------------- pid history
+    def _pid(self, j: int) -> np.ndarray:
+        mm = self._pid_mms.get(j)
+        if mm is None:
+            mm = self._pid_mms[j] = np.load(self.pid_paths[j],
+                                            mmap_mode="r+")
+        return mm
+
+    def _gather_sorted(self, mm: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """pid values for ascending-sorted ids: windowed sequential reads
+        of the pid file (the sorted merge join against pId_j — no random
+        accesses; the file pointer only moves forward)."""
+        out = np.empty(ids.shape[0], np.int64)
+        win = self.ooc.chunk_nodes
+        pos = 0
+        while pos < ids.shape[0]:
+            base = int(ids[pos])
+            cut = int(np.searchsorted(ids, base + win, side="left"))
+            window = np.asarray(mm[base:base + win])
+            out[pos:cut] = window[ids[pos:cut] - base]
+            self.io.count_scan(window.shape[0], window.nbytes)
+            pos = cut
+        return out
+
+    def pid_column(self, j: int) -> np.ndarray:
+        mm = self._pid(j)
+        self.io.count_scan(mm.shape[0], mm.nbytes)
+        return np.array(mm).astype(np.int64)
+
+    def pid_at(self, j: int, nodes: np.ndarray) -> np.ndarray:
+        return self._gather_sorted(self._pid(j),
+                                   np.asarray(nodes, dtype=np.int64))
+
+    def set_pid_at(self, j: int, nodes: np.ndarray,
+                   values: np.ndarray) -> None:
+        mm = self._pid(j)
+        mm[np.asarray(nodes, dtype=np.int64)] = \
+            np.asarray(values).astype(np.int32)
+        mm.flush()
+        self.io.count_sort(len(nodes), len(nodes) * 4)  # pid-file merge
+
+    def append_pid_rows(self, j: int, values: np.ndarray) -> None:
+        values = np.asarray(values).astype(np.int32)
+        path = self.pid_paths[j]
+        old = np.load(path, mmap_mode="r")
+        n = old.shape[0]
+        tmp = path + ".tmp"
+        mm = open_memmap(tmp, mode="w+", dtype=np.int32,
+                         shape=(n + values.shape[0],))
+        win = self.ooc.chunk_nodes
+        for s in range(0, n, win):
+            chunk = old[s:s + win]
+            mm[s:s + chunk.shape[0]] = chunk
+        mm[n:] = values
+        mm.flush()
+        del mm, old
+        self._pid_mms.pop(j, None)
+        os.replace(tmp, path)
+        self.io.count_scan(n, n * 4)
+        self.io.count_sort(values.shape[0], values.nbytes)
+
+    # ---------------------------------------------------------------- store
+    def resolve(self, j: int, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        out, self.next_pid[j] = self.stores[j].get_or_assign(
+            keys, self.next_pid[j])
+        if self.next_pid[j] > np.iinfo(np.int32).max:
+            # the pid files keep the build's int32 format; minted pids
+            # grow monotonically, so fail loudly instead of wrapping
+            # (the in-memory backend's int64 columns have no such limit)
+            raise OverflowError(
+                f"level-{j} pid space exceeded int32; rebuild to "
+                f"re-densify pids")
+        self.io.count_sort(keys.shape[0], keys.shape[0] * 8)  # ranking via S
+        return out
+
+    # -------------------------------------------------------------- gathers
+    def _frontier_out_edges(self, frontier: np.ndarray) -> np.ndarray:
+        """One sequential E_tst scan selecting the frontier's out-edges;
+        the concatenated selection inherits the global (src, elabel, dst)
+        order."""
+        sel = []
+        for chunk in self.ooc.iter_edges_tst(self.io):
+            cs = chunk["src"]
+            pos = np.minimum(np.searchsorted(frontier, cs),
+                             frontier.shape[0] - 1)
+            hit = frontier[pos] == cs
+            if hit.any():
+                sel.append(chunk[hit])
+        return (np.concatenate(sel) if sel
+                else np.empty(0, TST_DTYPE))
+
+    def frontier_signatures(self, j: int, frontier: np.ndarray, *,
+                            dedup: bool = True):
+        frontier = np.asarray(frontier, dtype=np.int64)
+        edges = self._frontier_out_edges(frontier)
+        # pId_{j-1}(tgt): sort the selection by target, merge-join it
+        # against the pid file's windowed sequential stream, scatter back
+        order = np.argsort(edges["dst"], kind="stable")
+        self.io.count_sort(edges.shape[0], edges.nbytes)
+        pid_tgt = np.empty(edges.shape[0], np.int64)
+        pid_tgt[order] = self._gather_sorted(
+            self._pid(j - 1), edges["dst"][order].astype(np.int64))
+        # the (src, elabel, pid) re-sort + dedup + segment wrap-sum inside
+        # signatures_from_edges is the in-memory engine's — bit-identical
+        seg = np.searchsorted(frontier, edges["src"].astype(np.int64))
+        p0 = self._gather_sorted(self._pid(0), frontier)
+        self.io.count_sort(edges.shape[0], edges.nbytes)
+        return hashes_np.signatures_from_edges(
+            p0, seg, edges["elabel"], pid_tgt, frontier.shape[0],
+            dedup=dedup)
+
+    def parents_of(self, nodes: np.ndarray) -> np.ndarray:
+        nodes = np.asarray(nodes, dtype=np.int64)
+        parents = []
+        for chunk in self.ooc.iter_edges_tts(self.io):
+            cd = chunk["dst"]
+            pos = np.minimum(np.searchsorted(nodes, cd),
+                             nodes.shape[0] - 1)
+            hit = nodes[pos] == cd
+            if hit.any():
+                parents.append(chunk["src"][hit])
+        if not parents:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(parents)).astype(np.int64)
+
+    def incident_edges(self, nid: int):
+        rows = []
+        for chunk in self.ooc.iter_edges_tst(self.io):
+            m = (chunk["src"] == nid) | (chunk["dst"] == nid)
+            if m.any():
+                rows.append(chunk[m])
+        cat = (np.concatenate(rows) if rows else np.empty(0, TST_DTYPE))
+        return cat["src"], cat["elabel"], cat["dst"]
+
+    # ------------------------------------------------------------ mutations
+    def add_node_rows(self, labels: np.ndarray) -> int:
+        return self.ooc.append_nodes(labels, stats=self.io)
+
+    def add_edge_rows(self, src, elabel, dst) -> None:
+        self.ooc.insert_edges(src, elabel, dst, stats=self.io)
+
+    def remove_edge_rows(self, src, elabel, dst) -> None:
+        self.ooc.delete_edges(src, elabel, dst, stats=self.io)
+
+    def compact(self, keep: np.ndarray, remap: np.ndarray) -> None:
+        self.ooc.compact_rows(keep, remap, stats=self.io)
+        n_new = int(np.count_nonzero(keep))
+        win = self.ooc.chunk_nodes
+        for j, path in enumerate(self.pid_paths):
+            old = np.load(path, mmap_mode="r")
+            tmp = path + ".tmp"
+            mm = open_memmap(tmp, mode="w+", dtype=np.int32,
+                             shape=(n_new,))
+            pos = 0
+            for s in range(0, old.shape[0], win):
+                chunk = np.asarray(old[s:s + win])
+                kmask = keep[s:s + chunk.shape[0]]
+                cnt = int(np.count_nonzero(kmask))
+                mm[pos:pos + cnt] = chunk[kmask]
+                pos += cnt
+                self.io.count_scan(chunk.shape[0], chunk.nbytes)
+            mm.flush()
+            del mm, old
+            self._pid_mms.pop(j, None)
+            os.replace(tmp, path)
+
+    # -------------------------------------------------------------- change k
+    def truncate_k(self, new_k: int) -> None:
+        for s in self.stores[new_k + 1:]:
+            s.close()
+        self.stores = self.stores[: new_k + 1]
+        self.next_pid = self.next_pid[: new_k + 1]
+        for j in range(new_k + 1, len(self.pid_paths)):
+            self._pid_mms.pop(j, None)
+            os.remove(self.pid_paths[j])
+        self.pid_paths = self.pid_paths[: new_k + 1]
+
+    def extend_k(self, new_k: int, mode: str) -> None:
+        # Out-of-core Change-k (increase) rebuilds: running extra
+        # iterations on top of pId_k needs the same join/fold pipeline a
+        # build runs anyway, and a rebuild yields the identical partition.
+        self.build(new_k, mode)

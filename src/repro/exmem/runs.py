@@ -11,14 +11,18 @@ k-way merge).  This module is the generic implementation of `sort`:
     touches only the pages of the blocks it buffers.
   * `sort_to_runs` forms the runs: each incoming chunk (the memory budget)
     is sorted in RAM with one `np.lexsort` and written out.
-  * `merge_runs` is the bounded-memory k-way merge: every live run buffers
-    ``budget_rows // k`` records; the *emit boundary* is the smallest
-    last-buffered key among runs that still have unbuffered records —
-    every buffered record ≤ the boundary is globally in final position, so
-    it can be emitted after one in-memory lexsort of the buffered prefixes.
+  * `merge_runs` is the bounded-memory k-way merge of the runs.  The
+    emit-boundary merge loop itself lives in `repro.core.kway` — the one
+    merge core shared with `SpillableSigStore`'s spill-run compaction and
+    `OocGraph`'s on-disk table updates; this module's wrapper only maps
+    record files onto (key columns + record payload) sources and does the
+    I/O accounting.
   * `external_sort` composes the two, collapsing run fan-in above
     ``fan_in`` with intermediate merge passes (multi-pass external sort),
     and yields the fully sorted stream chunk by chunk.
+  * `rebuffer` re-chunks a record stream to a fixed row budget, so
+    producers that emit sub-budget slivers (sparse merge joins on N >> E
+    graphs) still form full-budget runs.
 
 `IOStats` mirrors the paper's cost accounting: `sort_cost` counts records
 pushed through sort passes (run formation + every merge pass + signature
@@ -34,6 +38,8 @@ from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 from numpy.lib.format import open_memmap
+
+from repro.core.kway import merge_sorted_sources
 
 
 @dataclasses.dataclass
@@ -80,17 +86,30 @@ def lexsort_records(rec: np.ndarray, keys: Sequence[str]) -> np.ndarray:
     return rec[order]
 
 
-def _leq_bound(rec: np.ndarray, keys: Sequence[str], bound: tuple):
-    """Vectorized lexicographic `rec.key <= bound` mask."""
-    k0 = rec[keys[0]]
-    if len(keys) == 1:
-        return k0 <= bound[0]
-    return (k0 < bound[0]) | ((k0 == bound[0])
-                              & _leq_bound(rec, keys[1:], bound[1:]))
-
-
-def _last_key(buf: np.ndarray, keys: Sequence[str]) -> tuple:
-    return tuple(buf[k][-1] for k in keys)
+def rebuffer(chunks: Iterable[np.ndarray], rows: int) -> Iterator[np.ndarray]:
+    """Re-chunk a record stream into exactly ``rows``-sized chunks (the
+    final chunk may be shorter).  Producers like the sparse E_tts ⋈ pid
+    merge join emit one sliver per pid window — on N >> E graphs far below
+    the memory budget — and feeding those to `sort_to_runs` directly
+    inflates the run count (and so the merge passes).  Buffering up to the
+    budget first keeps every run full-sized."""
+    if rows < 1:
+        raise ValueError("rows must be >= 1")
+    buf: list = []
+    have = 0
+    for chunk in chunks:
+        if chunk.shape[0] == 0:
+            continue
+        buf.append(chunk)
+        have += chunk.shape[0]
+        while have >= rows:
+            cat = np.concatenate(buf) if len(buf) > 1 else buf[0]
+            yield cat[:rows]
+            rest = cat[rows:]
+            buf = [rest] if rest.shape[0] else []
+            have = int(rest.shape[0])
+    if have:
+        yield np.concatenate(buf) if len(buf) > 1 else buf[0]
 
 
 def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
@@ -118,7 +137,11 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
                stats: Optional[IOStats] = None) -> Iterator[np.ndarray]:
     """Bounded-memory k-way merge of sorted runs; yields sorted chunks of at
     most ``budget_rows`` records. Total resident memory is one block of
-    ``budget_rows // k`` records per live run (runs are memory-mapped)."""
+    ``budget_rows // k`` records per live run (runs are memory-mapped).
+
+    The merge loop is `repro.core.kway.merge_sorted_sources`; each run file
+    maps onto a source of (key field views..., whole record array) columns,
+    so the records ride along their own key as the payload column."""
     arrs = [np.load(p, mmap_mode="r") for p in paths]
     arrs = [a for a in arrs if a.shape[0]]
     if not arrs:
@@ -126,6 +149,7 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
     if stats is not None:
         stats.merge_passes += 1
     if len(arrs) == 1:
+        # degenerate merge: one run is already sorted, stream it (scan)
         a = arrs[0]
         for s in range(0, a.shape[0], budget_rows):
             chunk = np.array(a[s:s + budget_rows])
@@ -133,39 +157,10 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
                 stats.count_scan(chunk.shape[0], chunk.nbytes)
             yield chunk
         return
-    block = max(budget_rows // len(arrs), 1)
-    cur = [0] * len(arrs)
-    buf: list = [None] * len(arrs)
-    while True:
-        active = []
-        for i, a in enumerate(arrs):
-            if buf[i] is None or buf[i].shape[0] == 0:
-                if cur[i] < a.shape[0]:
-                    buf[i] = np.array(a[cur[i]:cur[i] + block])
-                    cur[i] += buf[i].shape[0]
-                else:
-                    buf[i] = None
-            if buf[i] is not None:
-                active.append(i)
-        if not active:
-            return
-        # Emit boundary: min last-buffered key among runs with unbuffered
-        # data left; runs fully in memory impose no bound.
-        bound = None
-        for i in active:
-            if cur[i] < arrs[i].shape[0]:
-                last = _last_key(buf[i], keys)
-                if bound is None or last < bound:
-                    bound = last
-        take = []
-        for i in active:
-            b = buf[i]
-            cnt = b.shape[0] if bound is None else int(
-                np.count_nonzero(_leq_bound(b, keys, bound)))
-            if cnt:
-                take.append(b[:cnt])
-                buf[i] = b[cnt:]
-        out = lexsort_records(np.concatenate(take), keys)
+    sources = [tuple(a[k] for k in keys) + (a,) for a in arrs]
+    for cols in merge_sorted_sources(sources, num_key_cols=len(keys),
+                                     budget_rows=budget_rows):
+        out = cols[-1]
         if stats is not None:
             stats.count_sort(out.shape[0], out.nbytes)
         yield out

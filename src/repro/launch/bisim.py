@@ -1,5 +1,8 @@
 """Bisimulation launcher: run Build_Bisim (single, distributed, or
-out-of-core) on a generated or saved graph.
+out-of-core) on a generated or saved graph, or maintain the partition
+under updates via the `add-edges` / `delete-node` / `compact`
+subcommands (in-memory by default; with `--oocore`, through the
+disk-resident `OocBackend`).
 
     PYTHONPATH=src python -m repro.launch.bisim --generator powerlaw \
         --nodes 100000 --edges 400000 --k 10 --mode sorted
@@ -8,6 +11,11 @@ out-of-core) on a generated or saved graph.
         --ranking bucketed --generator structured --nodes 50000
     PYTHONPATH=src python -m repro.launch.bisim --oocore \
         --chunk-edges 65536 --generator structured --nodes 300000
+    PYTHONPATH=src python -m repro.launch.bisim --oocore \
+        --chunk-edges 4096 --generator structured --nodes 9000 --k 5 \
+        add-edges --count 16
+    PYTHONPATH=src python -m repro.launch.bisim --oocore \
+        --generator random --nodes 5000 --k 4 compact --delete-nodes 3,7,11
 """
 from __future__ import annotations
 
@@ -38,7 +46,7 @@ def make_graph(args) -> Graph:
     raise SystemExit(f"unknown generator {args.generator}")
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default=None, help="path to saved .npz graph")
     ap.add_argument("--generator", default="powerlaw")
@@ -48,11 +56,14 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--mode", default="sorted",
                     choices=["sorted", "dedup_hash", "multiset"])
-    ap.add_argument("--distributed", action="store_true")
+    # one engine per session: the distributed builder has no out-of-core
+    # tables (and no maintenance backend), so the flags cannot combine
+    engine = ap.add_mutually_exclusive_group()
+    engine.add_argument("--distributed", action="store_true")
+    engine.add_argument("--oocore", action="store_true",
+                        help="disk-resident streamed build (repro.exmem)")
     ap.add_argument("--ranking", default="allgather",
                     choices=["allgather", "bucketed"])
-    ap.add_argument("--oocore", action="store_true",
-                    help="disk-resident streamed build (repro.exmem)")
     ap.add_argument("--chunk-edges", type=int, default=1 << 16,
                     help="oocore: E_t chunk rows (memory budget)")
     ap.add_argument("--chunk-nodes", type=int, default=None,
@@ -66,10 +77,117 @@ def main() -> None:
                     help="save pid history as .npz: one stacked 'pids' "
                          "array, or per-level 'pids_<j>' members with "
                          "--oocore (never materializes the full history)")
-    args = ap.parse_args()
+    sub = ap.add_subparsers(
+        dest="cmd", metavar="{add-edges,delete-node,compact}",
+        help="maintenance subcommands: build the partition, apply one "
+             "update through BisimMaintainer (in-memory, or OocBackend "
+             "with --oocore), report per-level propagation + I/O")
+    ap_add = sub.add_parser("add-edges",
+                            help="insert edges and propagate (Alg. 4)")
+    ap_add.add_argument("--count", type=int, default=1,
+                        help="number of random edges to insert")
+    ap_add.add_argument("--edge", action="append", default=[],
+                        metavar="S:L:T",
+                        help="explicit src:elabel:dst edge (repeatable; "
+                             "overrides --count)")
+    ap_del = sub.add_parser("delete-node",
+                            help="DELETE_NODE: drop incident edges, "
+                                 "tombstone the row")
+    ap_del.add_argument("--nid", type=int, required=True)
+    ap_cmp = sub.add_parser("compact",
+                            help="drop tombstoned rows, remap ids "
+                                 "densely")
+    ap_cmp.add_argument("--delete-nodes", default="", metavar="I,J,...",
+                        help="tombstone these nodes first")
+    return ap
+
+
+def _report_update(rep, dt: float, m) -> None:
+    import numpy as np
+    if rep is not None:
+        for j, (chk, chg, part) in enumerate(zip(
+                rep.nodes_checked, rep.nodes_changed,
+                rep.partitions_touched), start=1):
+            print(f"  level {j:2d}: checked={chk} changed={chg} "
+                  f"partitions_touched={part}")
+        if rep.rebuilt:
+            print("  rebuilt (rebuild_threshold heuristic fired)")
+    print(f"update: {dt * 1e3:.1f} ms; "
+          f"partitions@k={len(np.unique(m.pid()))}")
+
+
+def run_maintenance(args, g: Graph) -> None:
+    import numpy as np
+
+    from repro.core import BisimMaintainer
+
+    if args.distributed:
+        raise SystemExit(
+            "maintenance subcommands support the single and --oocore "
+            "engines (the distributed builder keeps no store)")
+    t0 = time.perf_counter()
+    if args.oocore:
+        from repro.exmem import OocBackend
+        backend = OocBackend(
+            g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
+            spill_threshold=args.spill_threshold, workdir=args.workdir)
+        m = BisimMaintainer(backend, args.k, mode=args.mode)
+    else:
+        backend = None
+        m = BisimMaintainer(g, args.k, mode=args.mode)
+    engine = "oocore" if args.oocore else "in-memory"
+    print(f"initial build ({engine}, k={args.k}, mode={args.mode}): "
+          f"{time.perf_counter() - t0:.2f}s")
+    io0 = backend.io.to_dict() if backend is not None else None
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    if args.cmd == "add-edges":
+        if args.edge:
+            triples = [tuple(int(x) for x in e.split(":"))
+                       for e in args.edge]
+            src, lab, dst = (np.array(c, dtype=np.int32)
+                             for c in zip(*triples))
+        else:
+            n = m.backend.num_nodes
+            src = rng.integers(0, n, args.count).astype(np.int32)
+            dst = rng.integers(0, n, args.count).astype(np.int32)
+            lab = rng.integers(0, 4, args.count).astype(np.int32)
+        rep = m.add_edges(src, lab, dst)
+        print(f"add-edges: {src.shape[0]} edges")
+    elif args.cmd == "delete-node":
+        rep = m.delete_node(args.nid)
+        print(f"delete-node {args.nid}: tombstones={m.num_tombstones}")
+    else:  # compact
+        rep = None
+        victims = [int(x) for x in args.delete_nodes.split(",") if x]
+        for nid in victims:
+            m.delete_node(nid)
+        remap = m.compact()
+        print(f"compact: dropped {int((remap < 0).sum())} rows -> "
+              f"{m.backend.num_nodes} nodes, {m.backend.num_edges} edges")
+    _report_update(rep, time.perf_counter() - t0, m)
+    if backend is not None:
+        io1 = backend.io.to_dict()
+        delta = {key: io1[key] - io0[key] for key in io1}
+        print(f"io delta: sort_cost={delta['sort_cost']} "
+              f"scan_cost={delta['scan_cost']} "
+              f"sortB={delta['sort_bytes']} scanB={delta['scan_bytes']} "
+              f"merges={delta['merge_passes']} spills={delta['spills']}")
+        if args.workdir:
+            print(f"workdir: {backend.workdir}")
+        else:
+            backend.close()
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     g = make_graph(args)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
+    if args.cmd:
+        run_maintenance(args, g)
+        return
     t0 = time.perf_counter()
     if args.oocore:
         from repro.exmem import build_bisim_oocore

@@ -1,5 +1,6 @@
-"""Out-of-core subsystem (repro.exmem): external merge-sort, OocGraph
-round-trips, spillable SigStore, and oocore-vs-in-memory equivalence."""
+"""Out-of-core subsystem (repro.exmem): the shared k-way merge core,
+external merge-sort, OocGraph round-trips and mutations, spillable
+SigStore, and oocore-vs-in-memory equivalence."""
 import os
 
 import numpy as np
@@ -7,12 +8,67 @@ import pytest
 from hypo_compat import given, settings, strategies as st
 
 from repro.core import SigStore, SpillableSigStore, build_bisim, same_partition
+from repro.core.kway import merge_sorted_sources
 from repro.exmem import (IOStats, OocGraph, build_bisim_oocore, external_sort,
-                         make_records, merge_runs, sort_to_runs)
+                         make_records, merge_runs, rebuffer, sort_to_runs)
 from repro.graph import generators as gen
 from repro.graph.storage import Graph, paper_example_graph
 
 MODES = ["sorted", "dedup_hash", "multiset"]
+
+
+# ------------------------------------------------------- k-way merge core
+@pytest.mark.parametrize("num_keys,budget", [(1, 7), (1, 64), (2, 16),
+                                             (3, 5)])
+def test_kway_core_matches_lexsort(num_keys, budget):
+    """merge_sorted_sources == one big lexsort, payloads riding their
+    keys, for any key width and budget."""
+    rng = np.random.default_rng(num_keys * 100 + budget)
+    sources = []
+    for n in (0, 1, 37, 150):
+        keys = [rng.integers(0, 9, n).astype(np.int64)
+                for _ in range(num_keys)]
+        order = np.lexsort(tuple(reversed(keys)))
+        keys = [c[order] for c in keys]
+        payload = np.asarray(
+            sum(c * 10 ** (2 * i) for i, c in enumerate(keys)), np.int64) \
+            if n else np.empty(0, np.int64)
+        sources.append(tuple(keys) + (payload,))
+    all_cols = [np.concatenate([s[c] for s in sources])
+                for c in range(num_keys + 1)]
+    merged = list(merge_sorted_sources(sources, num_keys,
+                                       budget_rows=budget))
+    got = [np.concatenate(c) for c in zip(*merged)]
+    order = np.lexsort(tuple(reversed(all_cols[:num_keys])))
+    for c in range(num_keys):
+        np.testing.assert_array_equal(got[c], all_cols[c][order])
+    # every emitted payload still equals its key-derived value
+    want_payload = sum(got[i] * 10 ** (2 * i) for i in range(num_keys))
+    np.testing.assert_array_equal(got[-1], want_payload)
+
+
+def test_kway_core_handles_empty_and_single():
+    out = list(merge_sorted_sources([(np.empty(0, np.int64),)], 1))
+    assert out == []
+    a = np.array([1, 3, 5], np.int64)
+    out = list(merge_sorted_sources([(a,), (np.array([2, 4], np.int64),)],
+                                    1, budget_rows=2))
+    np.testing.assert_array_equal(np.concatenate([c[0] for c in out]),
+                                  [1, 2, 3, 4, 5])
+
+
+# ------------------------------------------------------------- rebuffer
+def test_rebuffer_exact_chunks():
+    chunks = [np.arange(s, s + n, dtype=np.int64)
+              for s, n in [(0, 3), (3, 1), (4, 0), (4, 10), (14, 2)]]
+    out = list(rebuffer(chunks, 4))
+    assert [c.shape[0] for c in out] == [4, 4, 4, 4]
+    np.testing.assert_array_equal(np.concatenate(out), np.arange(16))
+    out = list(rebuffer(chunks, 5))
+    assert [c.shape[0] for c in out] == [5, 5, 5, 1]
+    assert list(rebuffer([], 4)) == []
+    with pytest.raises(ValueError):
+        list(rebuffer(chunks, 0))
 
 
 # ------------------------------------------------------ external merge sort
@@ -118,6 +174,77 @@ def test_ooc_edge_orders(tmp_path):
             == np.arange(g.num_edges)).all()
     assert (np.lexsort((tts["src"], tts["dst"]))
             == np.arange(g.num_edges)).all()
+
+
+def test_ooc_table_mutations_match_graph_ops(tmp_path):
+    """insert_edges / delete_edges / append_nodes / compact_rows on the
+    chunked tables reproduce the in-memory Graph edit semantics exactly
+    (including duplicate-triple dropping), preserve both sort orders, and
+    persist through the meta file."""
+    g = gen.random_graph(80, 300, 3, 2, seed=6)
+    ooc = g.to_ooc(str(tmp_path / "t"), chunk_nodes=16, chunk_edges=32)
+    io = IOStats()
+    rng = np.random.default_rng(0)
+    # insert a mix of novel and duplicate edges
+    s = np.concatenate([rng.integers(0, 80, 20).astype(np.int32),
+                        g.src[:5]])
+    d = np.concatenate([rng.integers(0, 80, 20).astype(np.int32),
+                        g.dst[:5]])
+    l = np.concatenate([rng.integers(0, 3, 20).astype(np.int32),
+                        g.elabel[:5]])
+    added = ooc.insert_edges(s, l, d, stats=io)
+    g2 = g.with_edges_added(s, d, l)
+    assert added == g2.num_edges - g.num_edges
+    m = ooc.to_memory()
+    np.testing.assert_array_equal(m.src, g2.src)
+    np.testing.assert_array_equal(m.dst, g2.dst)
+    np.testing.assert_array_equal(m.elabel, g2.elabel)
+    # E_tts invariant survives the merge
+    tts = np.concatenate(list(ooc.iter_edges_tts()))
+    assert (np.lexsort((tts["elabel"], tts["src"], tts["dst"]))
+            == np.arange(ooc.num_edges)).all()
+    assert io.merge_passes >= 2  # both sort orders went through the core
+    # delete a slice (some triples may repeat-match nothing: still exact)
+    rm = slice(3, 40)
+    removed = ooc.delete_edges(g2.src[rm], g2.elabel[rm], g2.dst[rm])
+    g3 = g2.with_edges_removed(g2.src[rm], g2.dst[rm], g2.elabel[rm])
+    assert removed == g2.num_edges - g3.num_edges
+    np.testing.assert_array_equal(ooc.to_memory().src, g3.src)
+    # append nodes
+    assert ooc.append_nodes([5, 6, 7]) == 80 and ooc.num_nodes == 83
+    g4 = g3.with_nodes_added(np.array([5, 6, 7]))
+    np.testing.assert_array_equal(ooc.to_memory().node_labels,
+                                  g4.node_labels)
+    # compact two rows away
+    keep = np.ones(83, bool)
+    keep[[0, 50]] = False
+    remap = np.cumsum(keep, dtype=np.int64) - 1
+    remap[~keep] = -1
+    emask = keep[g4.src] & keep[g4.dst]
+    g5 = Graph(g4.node_labels[keep],
+               remap[g4.src[emask]].astype(np.int32),
+               remap[g4.dst[emask]].astype(np.int32), g4.elabel[emask])
+    ooc.compact_rows(keep, remap)
+    m = ooc.to_memory()
+    np.testing.assert_array_equal(m.node_labels, g5.node_labels)
+    np.testing.assert_array_equal(m.src, g5.src)
+    np.testing.assert_array_equal(m.dst, g5.dst)
+    # the mutated meta round-trips through load
+    re = OocGraph.load(str(tmp_path / "t"))
+    assert (re.num_nodes, re.num_edges) == (ooc.num_nodes, ooc.num_edges)
+    np.testing.assert_array_equal(re.to_memory().src, g5.src)
+
+
+def test_ooc_insert_edges_validates(tmp_path):
+    g = gen.random_graph(20, 60, 2, 2, seed=1)
+    ooc = g.to_ooc(str(tmp_path / "t"), chunk_edges=16)
+    for bad in [([99], [0], [0]), ([0], [0], [-1])]:
+        with pytest.raises(ValueError):
+            ooc.insert_edges(*bad)
+    assert ooc.num_edges == g.num_edges  # rejected: tables untouched
+    np.testing.assert_array_equal(ooc.to_memory().src, g.src)
+    assert ooc.insert_edges([], [], []) == 0
+    assert ooc.delete_edges([], [], []) == 0
 
 
 def test_ooc_empty_edges(tmp_path):
@@ -251,6 +378,21 @@ def test_oocore_counters_grow_linearly_in_k(tmp_path):
     dc1 = costs[4][1] - costs[2][1]
     dc2 = costs[8][1] - costs[4][1]
     assert dc1 > 0 and dc2 == 2 * dc1  # scan_cost: +const per iteration
+
+
+def test_sparse_join_forms_full_runs(tmp_path):
+    """Regression: on N >> E graphs the E_tts ⋈ pid join emits one sliver
+    per pid window; without rebuffering each sliver became its own run.
+    With the buffer, every iteration forms exactly ceil(E / chunk_edges)
+    full-budget runs."""
+    g = gen.random_graph(600, 90, 3, 2, seed=21)  # sparse: N >> E
+    k, chunk = 3, 32
+    res = build_bisim_oocore(g, k, chunk_edges=chunk, chunk_nodes=16,
+                             early_stop=False, workdir=str(tmp_path))
+    per_iter = -(-g.num_edges // chunk)  # ceil
+    assert res.io.runs_written == k * per_iter
+    ref = build_bisim(g, k, early_stop=False)
+    assert res.counts == ref.counts
 
 
 def test_oocore_accepts_oocgraph_and_cleanup(tmp_path):

@@ -9,7 +9,7 @@ from repro.graph.storage import paper_example_graph
 
 
 def _check(m: BisimMaintainer):
-    ref = build_bisim(m.graph, m.k, early_stop=False)
+    ref = build_bisim(m.graph, m.k, mode=m.mode, early_stop=False)
     for j in range(m.k + 1):
         assert same_partition(m.pids[j], ref.pids[j]), j
 
@@ -163,6 +163,21 @@ def test_change_k():
     _check(m)
 
 
-def test_maintenance_requires_set_semantics():
+def test_multiset_maintenance_matches_rebuild():
+    """Counting-bisimulation maintenance: skipping the (eLabel, pId) dedup
+    — exactly as construction does in `multiset` mode — keeps the
+    maintained partition equal to a fresh multiset rebuild."""
+    g = gen.random_graph(30, 90, 3, 2, seed=13)
+    m = BisimMaintainer(g, 3, mode="multiset")
+    m.add_edge(0, 0, 1)
+    m.add_edges([2, 2, 5], [1, 0, 1], [9, 9, 3])
+    m.add_nodes([0, 2])
+    m.delete_node(7)
+    _check(m)
+    m.compact()
+    _check(m)
+
+
+def test_maintenance_rejects_unknown_mode():
     with pytest.raises(ValueError):
-        BisimMaintainer(paper_example_graph(), 2, mode="multiset")
+        BisimMaintainer(paper_example_graph(), 2, mode="bogus")
