@@ -24,6 +24,7 @@ ALL = [
     ("fig7_8_maintenance", bench_maintenance.run, True),
     ("fig9_10_extremes", bench_extremes.run, False),
     ("fig11_batch_updates", bench_batch_updates.run, True),
+    ("fig12_prefetch", bench_build.run_prefetch, True),
 ]
 
 

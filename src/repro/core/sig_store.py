@@ -180,14 +180,24 @@ class SpillableSigStore(SigStore):
 
     ``io`` (an `exmem.runs.IOStats`) charges spills and merges to
     `sort_cost`, mirroring the paper's accounting of maintaining S.
+
+    ``aio`` (duck-typed `exmem.aio.AioConfig`; this module never imports
+    the exmem layer) runs spill writes on the pipeline executor, so a
+    flush overlaps the fold that triggered it; a probe that needs a
+    still-in-flight run waits for exactly that file.  ``mmap_cache``
+    bounds the open-memmap LRU over spill runs: a probe window re-uses
+    the files it just touched instead of re-opening every run, while a
+    store with hundreds of runs keeps O(mmap_cache) descriptors, not
+    O(runs).
     """
 
-    __slots__ = ("spill_threshold", "max_runs", "spill_dir", "io",
-                 "_runs", "_run_seq", "_owns_dir", "_mmaps")
+    __slots__ = ("spill_threshold", "max_runs", "spill_dir", "io", "aio",
+                 "mmap_cache", "_runs", "_run_seq", "_owns_dir", "_mmaps",
+                 "_pending")
 
     def __init__(self, spill_threshold: int = 1 << 20, *,
                  spill_dir: "str | None" = None, max_runs: int = 8,
-                 io=None):
+                 io=None, aio=None, mmap_cache: "int | None" = None):
         super().__init__(np.empty(0, _U64), np.empty(0, np.int64),
                          presorted=True)
         if spill_threshold < 1:
@@ -196,9 +206,22 @@ class SpillableSigStore(SigStore):
             # with a single victim the tiered merge could never reduce the
             # run count, so fan-out would grow without bound
             raise ValueError("max_runs must be >= 2")
+        if mmap_cache is None:
+            # a lookup can cycle through every run's keys+pids files, so
+            # the steady-state working set is 2*max_runs open maps (the
+            # tiered merge keeps the run count near max_runs); default to
+            # holding a full probe cycle, else every probe would reopen
+            # every run (0% hit rate under cyclic eviction)
+            mmap_cache = 2 * int(max_runs) + 2
+        if mmap_cache < 2:
+            # a probe touches a run's keys and pids files together; a
+            # 1-entry cache would thrash within a single window
+            raise ValueError("mmap_cache must be >= 2")
         self.spill_threshold = int(spill_threshold)
         self.max_runs = int(max_runs)
         self.io = io
+        self.aio = aio
+        self.mmap_cache = int(mmap_cache)
         self._owns_dir = spill_dir is None
         if spill_dir is None:
             import tempfile
@@ -207,7 +230,9 @@ class SpillableSigStore(SigStore):
         self.spill_dir = spill_dir
         self._runs = []      # list of (keys_path, pids_path, length)
         self._run_seq = 0
-        self._mmaps = {}     # path -> open memmap (runs are immutable)
+        from collections import OrderedDict
+        self._mmaps = OrderedDict()  # path -> memmap, LRU-bounded
+        self._pending = {}   # path -> in-flight async spill write
 
     # ------------------------------------------------------------- queries
     def __len__(self) -> int:
@@ -217,12 +242,24 @@ class SpillableSigStore(SigStore):
     def num_spilled_runs(self) -> int:
         return len(self._runs)
 
+    def _wait_pending(self, path: str) -> None:
+        fut = self._pending.pop(path, None)
+        if fut is not None:
+            fut.result()
+
     def _mmap(self, path: str) -> np.ndarray:
-        """Open-once memmap of a run file (runs are immutable until their
-        file is deleted by a merge, which also evicts the cache entry)."""
+        """LRU-cached memmap of a run file (runs are immutable until their
+        file is deleted by a merge, which also evicts the cache entry).
+        The cache holds at most ``mmap_cache`` open files; an async spill
+        still in flight for ``path`` is awaited before the open."""
         mm = self._mmaps.get(path)
-        if mm is None:
-            mm = self._mmaps[path] = np.load(path, mmap_mode="r")
+        if mm is not None:
+            self._mmaps.move_to_end(path)
+            return mm
+        self._wait_pending(path)
+        mm = self._mmaps[path] = np.load(path, mmap_mode="r")
+        while len(self._mmaps) > self.mmap_cache:
+            self._mmaps.popitem(last=False)
         return mm
 
     def lookup(self, keys) -> tuple[np.ndarray, np.ndarray]:
@@ -265,12 +302,19 @@ class SpillableSigStore(SigStore):
             return
         kp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.keys.npy")
         pp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.pids.npy")
-        np.save(kp, self.keys)
-        np.save(pp, self.pids)
+        if self.aio is not None and getattr(self.aio, "enabled", False):
+            # the resident arrays are replaced (never mutated) below, so
+            # the background save owns them; probes against this run wait
+            # on the future in _mmap before opening the file
+            self._pending[kp] = self.aio.save_async(kp, self.keys)
+            self._pending[pp] = self.aio.save_async(pp, self.pids)
+        else:
+            np.save(kp, self.keys)
+            np.save(pp, self.pids)
         self._runs.append((kp, pp, n))
         self._run_seq += 1
         if self.io is not None:
-            self.io.spills += 1
+            self.io.bump("spills")
             self.io.count_sort(n, self.keys.nbytes + self.pids.nbytes)
         self.keys = np.empty(0, _U64)
         self.pids = np.empty(0, np.int64)
@@ -294,6 +338,9 @@ class SpillableSigStore(SigStore):
         by_size = sorted(self._runs, key=lambda r: r[2])
         victims = by_size[:self.max_runs]
         survivors = by_size[self.max_runs:]
+        for kp, pp, _ in victims:
+            self._wait_pending(kp)
+            self._wait_pending(pp)
         srcs = [(np.load(kp, mmap_mode="r"), np.load(pp, mmap_mode="r"))
                 for kp, pp, _ in victims]
         total = sum(ln for _, _, ln in victims)
@@ -314,7 +361,7 @@ class SpillableSigStore(SigStore):
         mp.flush()
         del mk, mp, srcs
         if self.io is not None:
-            self.io.merge_passes += 1
+            self.io.bump("merge_passes")
             self.io.count_sort(total, total * 16)
         for kp, pp, _ in victims:
             for p in (kp, pp):
@@ -330,6 +377,8 @@ class SpillableSigStore(SigStore):
 
     def merged_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """Fully materialized sorted (keys, pids) — tests/debugging only."""
+        for path in list(self._pending):
+            self._wait_pending(path)
         ks = [self.keys] + [np.load(kp) for kp, _, _ in self._runs]
         ps = [self.pids] + [np.load(pp) for _, pp, _ in self._runs]
         keys = np.concatenate(ks)
@@ -343,6 +392,13 @@ class SpillableSigStore(SigStore):
 
     def close(self) -> None:
         """Delete the spill runs (and the spill dir if we created it)."""
+        for path in list(self._pending):
+            fut = self._pending.pop(path, None)
+            if fut is not None:
+                try:
+                    fut.result()
+                except BaseException:
+                    pass  # tearing down anyway; the file is removed below
         self._mmaps.clear()
         for kp, pp, _ in self._runs:
             for p in (kp, pp):

@@ -34,6 +34,28 @@ that regime; each module maps onto a paper construct:
              ``keep_stores=True`` hands the per-level stores to the
              maintenance backend instead of deleting them.
 
+  aio.py     the async I/O pipeline — the paper's "overlap I/O with
+             computation" as a first-class subsystem.  Contracts:
+             `PrefetchReader` wraps any chunk iterator with a bounded
+             (``prefetch_depth``) one-chunk-ahead background thread and
+             stays iterator-compatible (producer exceptions re-raise at
+             the consumer; ``close()`` joins the thread, also on
+             abandonment).  `StreamingWriter` double-buffers appends to a
+             known-length ``.npy`` file and publishes it atomically
+             (temp file, fsync, rename) on ``close()`` — a partial file
+             is never visible.  `Pipeline` fans a reader through a
+             transform into a writer; backpressure is structural (both
+             hand-off queues are bounded, no stage outruns the others).
+             `ReadaheadArray` double-buffers the k-way merge's per-run
+             input blocks.  INVARIANT: the pipeline changes only *when*
+             bytes move — partitions are bit-identical and the `IOStats`
+             sort/scan counters exactly equal with the pipeline on
+             (``io_threads>=1``) or off (``io_threads=0``); `IOStats` is
+             lock-guarded so producer threads can charge it, while
+             wall-clock overlap lives in the separate `AioStats`.
+             Exposed as ``io_threads``/``prefetch_depth`` knobs on
+             `build_bisim_oocore`, `OocBackend`, and the launcher.
+
   maintenance.py  §4 out-of-core. `OocBackend` implements the
              `repro.core.maintenance.MaintenanceBackend` storage
              protocol — the contract `BisimMaintainer` programs against:
@@ -50,6 +72,8 @@ that regime; each module maps onto a paper construct:
 Partitions are identical (up to pid renaming) to the in-memory
 `repro.core` engines in every signature mode.
 """
+from .aio import (AioConfig, AioStats, BoundedSaver, Pipeline,
+                  PrefetchReader, ReadaheadArray, StreamingWriter)
 from .build import OocBisimResult, build_bisim_oocore
 from .maintenance import OocBackend
 from .runs import (IOStats, external_sort, lexsort_records, make_records,
@@ -60,4 +84,6 @@ __all__ = [
     "OocBisimResult", "build_bisim_oocore", "OocBackend", "IOStats",
     "external_sort", "lexsort_records", "make_records", "merge_runs",
     "rebuffer", "sort_to_runs", "ChunkedColumn", "OocGraph",
+    "AioConfig", "AioStats", "BoundedSaver", "Pipeline", "PrefetchReader",
+    "ReadaheadArray", "StreamingWriter",
 ]

@@ -31,6 +31,7 @@ sort(|N_t|))` shape: both counters grow linearly in k.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import os
@@ -42,7 +43,6 @@ from typing import Iterator, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
-from numpy.lib.format import open_memmap
 
 from repro.core import hashes_np
 from repro.core import signatures as sig
@@ -50,6 +50,7 @@ from repro.core.partition import IterationStats
 from repro.core.sig_store import SpillableSigStore, fuse_key, label_key
 from repro.graph.storage import Graph
 
+from . import aio as aio_mod
 from . import runs as runs_mod
 from .runs import IOStats
 from .tables import OocGraph
@@ -75,6 +76,7 @@ class OocBisimResult:
     # out-of-core maintenance backend adopts
     stores: Optional[list] = None
     next_pids: Optional[list] = None
+    aio: Optional[aio_mod.AioStats] = None   # overlap report (read/write wait)
     _pids_cache: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -128,20 +130,27 @@ def _joined_chunks(ooc: OocGraph, pid_mm: np.ndarray, window_rows: int,
     (N >> E), so each chunk is consumed in sub-ranges whose pid window is
     capped at `window_rows` — resident memory stays a constant number of
     chunks regardless of sparsity."""
-    for chunk in ooc.iter_edges_tts(io):
-        dst = chunk["dst"].astype(np.int64)
-        pos = 0
-        while pos < dst.shape[0]:
-            d0 = int(dst[pos])
-            cut = int(np.searchsorted(dst, d0 + window_rows, side="left"))
-            window = np.asarray(pid_mm[d0:d0 + window_rows])
-            part = slice(pos, cut)
-            rec = np.empty(cut - pos, _JOIN_DTYPE)
-            rec["src"] = chunk["src"][part]
-            rec["elabel"] = chunk["elabel"][part]
-            rec["pid"] = window[dst[part] - d0]
-            pos = cut
-            yield rec
+    scan = ooc.iter_edges_tts(io)
+    try:
+        for chunk in scan:
+            dst = chunk["dst"].astype(np.int64)
+            pos = 0
+            while pos < dst.shape[0]:
+                d0 = int(dst[pos])
+                cut = int(np.searchsorted(dst, d0 + window_rows,
+                                          side="left"))
+                window = np.asarray(pid_mm[d0:d0 + window_rows])
+                part = slice(pos, cut)
+                rec = np.empty(cut - pos, _JOIN_DTYPE)
+                rec["src"] = chunk["src"][part]
+                rec["elabel"] = chunk["elabel"][part]
+                rec["pid"] = window[dst[part] - d0]
+                pos = cut
+                yield rec
+    finally:
+        # the scan may be a prefetched generator: close it promptly so an
+        # abandoned join (early convergence, error) leaves no live thread
+        scan.close()
 
 
 def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
@@ -204,7 +213,10 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
                        spill_threshold: int = 1 << 20,
                        use_kernel: bool = False,
                        keep_stores: bool = False,
-                       stats: Optional[IOStats] = None) -> OocBisimResult:
+                       stats: Optional[IOStats] = None,
+                       io_threads: int = 1, prefetch_depth: int = 2,
+                       aio: Optional[aio_mod.AioConfig] = None
+                       ) -> OocBisimResult:
     """Out-of-core Build_Bisim. Accepts an in-memory `Graph` (spilled to
     chunked tables first) or an `OocGraph` (whose chunk geometry wins).
 
@@ -218,6 +230,17 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
     keeps resolving new signatures against S after the build.  `stats`
     threads an external `IOStats` so callers accumulating cross-build
     counters (maintenance again) see the build's costs too.
+
+    io_threads / prefetch_depth configure the `exmem.aio` pipeline: table
+    scans, the join stream, the external re-sort (async run saves +
+    readahead merge inputs), the final sorted stream feeding the device
+    fold, and the pid-file writes all run double-buffered behind bounded
+    queues.  ``io_threads=0`` disables the pipeline (fully synchronous).
+    Either way the partition is bit-identical and `IOStats` is exactly
+    equal — the pipeline changes *when* bytes move, never what or how
+    much.  An explicit ``aio`` config (the maintenance backend shares
+    one across builds) overrides the two knobs; the caller then owns its
+    lifecycle.
     """
     if mode not in ("sorted", "dedup_hash", "multiset"):
         raise ValueError(f"unknown signature mode: {mode}")
@@ -226,18 +249,26 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
     if owns_workdir:
         workdir = tempfile.mkdtemp(prefix="oocore-")
     os.makedirs(workdir, exist_ok=True)
+    owns_aio = aio is None
+    if owns_aio:
+        aio = aio_mod.AioConfig(io_threads=io_threads,
+                                prefetch_depth=prefetch_depth)
     try:
         return _build_oocore(
             graph, k, mode=mode, dedup=dedup, chunk_edges=chunk_edges,
             chunk_nodes=chunk_nodes, early_stop=early_stop,
             workdir=workdir, spill_threshold=spill_threshold,
-            use_kernel=use_kernel, keep_stores=keep_stores, stats=stats)
+            use_kernel=use_kernel, keep_stores=keep_stores, stats=stats,
+            aio=aio)
     except BaseException:
         if owns_workdir:
             # a failed build must not strand GBs of spilled tables in a
             # tempdir the caller has no handle to
             shutil.rmtree(workdir, ignore_errors=True)
         raise
+    finally:
+        if owns_aio:
+            aio.close()
 
 
 def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
@@ -245,14 +276,39 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
                   chunk_nodes: Optional[int], early_stop: bool,
                   workdir: str, spill_threshold: int,
                   use_kernel: bool, keep_stores: bool = False,
-                  stats: Optional[IOStats] = None) -> OocBisimResult:
+                  stats: Optional[IOStats] = None,
+                  aio: Optional[aio_mod.AioConfig] = None) -> OocBisimResult:
     io = stats if stats is not None else IOStats()
+    if aio is None:
+        aio = aio_mod.AioConfig(io_threads=0)
+    restore_graph_aio = False
     if isinstance(graph, Graph):
         ooc = OocGraph.from_graph(
             graph, os.path.join(workdir, "graph"),
-            chunk_nodes=chunk_nodes or chunk_edges, chunk_edges=chunk_edges)
+            chunk_nodes=chunk_nodes or chunk_edges, chunk_edges=chunk_edges,
+            aio=aio)
     else:
         ooc = graph
+        if ooc.aio is None:
+            # thread the caller's tables through this build's pipeline;
+            # put the graph back the way we found it on exit
+            ooc.aio = aio
+            restore_graph_aio = True
+    try:
+        return _build_oocore_inner(
+            ooc, k, mode=mode, dedup=dedup, early_stop=early_stop,
+            workdir=workdir, spill_threshold=spill_threshold,
+            use_kernel=use_kernel, keep_stores=keep_stores, io=io, aio=aio)
+    finally:
+        if restore_graph_aio:
+            ooc.aio = None
+
+
+def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
+                        early_stop: bool, workdir: str,
+                        spill_threshold: int, use_kernel: bool,
+                        keep_stores: bool, io: IOStats,
+                        aio: aio_mod.AioConfig) -> OocBisimResult:
     n = ooc.num_nodes
     c_edges = ooc.chunk_edges
     c_nodes = ooc.chunk_nodes
@@ -267,7 +323,8 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         spill_dir = (os.path.join(workdir, "stores", f"lvl_{j:03d}")
                      if keep_stores else os.path.join(it_dir, "store"))
         return SpillableSigStore(
-            spill_threshold=spill_threshold, spill_dir=spill_dir, io=io)
+            spill_threshold=spill_threshold, spill_dir=spill_dir, io=io,
+            aio=aio)
 
     def _retire_store(store: SpillableSigStore) -> None:
         if keep_stores:
@@ -277,20 +334,20 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
 
     # ---------------------------------------------------- iteration 0
     # Rank node labels into pId_0, streaming N_t chunk by chunk through
-    # the store — the paper's one-off `sort(|N_t|)` term.
+    # the store — the paper's one-off `sort(|N_t|)` term.  The N_t scan
+    # is prefetched (via ooc.aio) and the pid file is appended through a
+    # double-buffered StreamingWriter (atomic rename on close).
     t0 = time.perf_counter()
     s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
     it_dir = os.path.join(workdir, "it000")
     store = _new_store(it_dir, 0)
-    pid_mm = open_memmap(_pid_path(0), mode="w+", dtype=np.int32,
-                         shape=(n,))
     next_pid = 0
-    for base, labels in ooc.iter_nodes(io):
-        pids_chunk, next_pid = store.get_or_assign(label_key(labels),
-                                                   next_pid)
-        pid_mm[base:base + labels.shape[0]] = pids_chunk.astype(np.int32)
-        io.count_sort(labels.shape[0], labels.shape[0] * 4)  # ranking
-    pid_mm.flush()
+    with aio.writer(_pid_path(0), np.int32, n) as pid_w:
+        for base, labels in ooc.iter_nodes(io):
+            pids_chunk, next_pid = store.get_or_assign(label_key(labels),
+                                                       next_pid)
+            pid_w.write(pids_chunk.astype(np.int32))
+            io.count_sort(labels.shape[0], labels.shape[0] * 4)  # ranking
     _retire_store(store)
     shutil.rmtree(it_dir, ignore_errors=True)
     counts = [next_pid]
@@ -312,18 +369,18 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         # The join emits one sliver per pid window — far below the budget
         # on sparse N >> E graphs — so rebuffer to full chunk_edges-sized
         # chunks first: every formed run is budget-sized and the merge
-        # fan-in stays at ceil(|E_t| / chunk_edges).
-        sorted_stream = runs_mod.external_sort(
-            runs_mod.rebuffer(
-                _joined_chunks(ooc, pid_prev_mm, c_nodes, io), c_edges),
-            _JOIN_KEYS,
-            os.path.join(it_dir, "sort"), budget_rows=c_edges, stats=io)
-        io.count_scan(n, n * 4)  # the pid_{j-1} file scan of the join
-
-        # stages 3+4: device fold + streamed ranking in node order
+        # fan-in stays at ceil(|E_t| / chunk_edges).  The pipeline puts
+        # one PrefetchReader under the join (the E_tts scan, via ooc.aio)
+        # and one over the whole join+re-sort chain, which therefore runs
+        # ahead of the device fold; the re-sort itself uses async run
+        # saves and windowed readahead of the merge inputs.  (No reader
+        # between join and re-sort: both are CPU-light and share one
+        # thread — an extra hop costs more GIL churn than it overlaps.)
+        # stages 3+4: device fold + streamed ranking in node order; the
+        # pId_j file goes through a double-buffered StreamingWriter so
+        # ranking window w streams to disk while window w+1 folds.
         store = _new_store(it_dir, j)
-        pid_new_mm = open_memmap(_pid_path(j), mode="w+", dtype=np.int32,
-                                 shape=(n,))
+        pid_w = aio.writer(_pid_path(j), np.int32, n)
         acc_hi = np.zeros(c_nodes, np.uint32)
         acc_lo = np.zeros(c_nodes, np.uint32)
         next_pid = 0
@@ -338,35 +395,49 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
                                            acc_lo[:end - base], p0)
             keys = fuse_key(hi, lo)
             pids_chunk, next_pid = store.get_or_assign(keys, next_pid)
-            pid_new_mm[base:end] = pids_chunk.astype(np.int32)
+            pid_w.write(pids_chunk.astype(np.int32))
             io.count_sort(end - base, (end - base) * 8)  # ranking via S
             acc_hi.fill(0)
             acc_lo.fill(0)
             return end
 
-        for src_u, hi_u, lo_u in _fold_sorted_stream(sorted_stream,
-                                                     c_edges, dedup,
-                                                     use_kernel):
-            i = 0
-            while i < src_u.shape[0]:
-                wend = node_base + c_nodes
-                cut = int(np.searchsorted(src_u, wend, side="left"))
-                if cut > i:
-                    # src_u is strictly increasing, so the slice indices
-                    # are unique: plain fancy-indexed add (uint32 wrap)
-                    # beats the per-element np.add.at dispatch
-                    rows = src_u[i:cut] - node_base
-                    with np.errstate(over="ignore"):
-                        acc_hi[rows] += hi_u[i:cut]
-                        acc_lo[rows] += lo_u[i:cut]
-                    i = cut
-                if i < src_u.shape[0]:
+        try:
+            with contextlib.ExitStack() as stack:
+                joined = stack.enter_context(contextlib.closing(
+                    _joined_chunks(ooc, pid_prev_mm, c_nodes, io)))
+                sorted_stream = stack.enter_context(contextlib.closing(
+                    aio.prefetch(runs_mod.external_sort(
+                        runs_mod.rebuffer(joined, c_edges), _JOIN_KEYS,
+                        os.path.join(it_dir, "sort"), budget_rows=c_edges,
+                        stats=io, aio=aio))))
+                io.count_scan(n, n * 4)  # the pid_{j-1} scan of the join
+                for src_u, hi_u, lo_u in _fold_sorted_stream(sorted_stream,
+                                                             c_edges, dedup,
+                                                             use_kernel):
+                    i = 0
+                    while i < src_u.shape[0]:
+                        wend = node_base + c_nodes
+                        cut = int(np.searchsorted(src_u, wend, side="left"))
+                        if cut > i:
+                            # src_u is strictly increasing, so the slice
+                            # indices are unique: plain fancy-indexed add
+                            # (uint32 wrap) beats the per-element
+                            # np.add.at dispatch
+                            rows = src_u[i:cut] - node_base
+                            with np.errstate(over="ignore"):
+                                acc_hi[rows] += hi_u[i:cut]
+                                acc_lo[rows] += lo_u[i:cut]
+                            i = cut
+                        if i < src_u.shape[0]:
+                            _finalize_window(node_base)
+                            node_base += c_nodes
+                while node_base < n:
                     _finalize_window(node_base)
                     node_base += c_nodes
-        while node_base < n:
-            _finalize_window(node_base)
-            node_base += c_nodes
-        pid_new_mm.flush()
+            pid_w.close()
+        except BaseException:
+            pid_w.abort()
+            raise
         _retire_store(store)
         shutil.rmtree(it_dir, ignore_errors=True)
 
@@ -384,4 +455,5 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         workdir=workdir, pid_paths=pid_paths, counts=counts, stats=it_stats,
         io=io, converged_at=converged_at, k_requested=k, num_nodes=n,
         stores=kept_stores if keep_stores else None,
-        next_pids=list(counts) if keep_stores else None)
+        next_pids=list(counts) if keep_stores else None,
+        aio=aio.stats)

@@ -36,12 +36,12 @@ import tempfile
 from typing import Optional, Union
 
 import numpy as np
-from numpy.lib.format import open_memmap
 
 from repro.core import hashes_np
 from repro.core.maintenance import MaintenanceBackend
 from repro.graph.storage import Graph
 
+from .aio import AioConfig, Pipeline
 from .build import build_bisim_oocore
 from .runs import IOStats
 from .tables import TST_DTYPE, OocGraph
@@ -60,8 +60,14 @@ class OocBackend(MaintenanceBackend):
                  workdir: Optional[str] = None,
                  chunk_edges: int = 1 << 16,
                  chunk_nodes: Optional[int] = None,
-                 spill_threshold: int = 1 << 20):
+                 spill_threshold: int = 1 << 20,
+                 io_threads: int = 1, prefetch_depth: int = 2):
         self.io = IOStats()
+        # one async pipeline per backend: the builds it runs, its table
+        # scans, and its pid-file rewrites all share the executor and the
+        # overlap stats (io_threads=0 => fully synchronous)
+        self.aio = AioConfig(io_threads=io_threads,
+                             prefetch_depth=prefetch_depth)
         self._owns_workdir = workdir is None
         if workdir is None:
             workdir = tempfile.mkdtemp(prefix="ooc-maint-")
@@ -72,11 +78,12 @@ class OocBackend(MaintenanceBackend):
             if os.path.abspath(graph.root) != os.path.abspath(graph_dir):
                 shutil.rmtree(graph_dir, ignore_errors=True)
                 graph.save(graph_dir)
-            self.ooc = OocGraph(graph_dir)
+            self.ooc = OocGraph(graph_dir, aio=self.aio)
         else:
             self.ooc = graph.to_ooc(
                 graph_dir, chunk_nodes=chunk_nodes or chunk_edges,
                 chunk_edges=chunk_edges)
+            self.ooc.aio = self.aio
         self.spill_threshold = spill_threshold
         self.stores: Optional[list] = None
         self.next_pid: Optional[list] = None
@@ -111,7 +118,7 @@ class OocBackend(MaintenanceBackend):
         res = build_bisim_oocore(
             self.ooc, k, mode=mode, early_stop=False, workdir=bdir,
             spill_threshold=self.spill_threshold, keep_stores=True,
-            stats=self.io)
+            stats=self.io, aio=self.aio)
         self.pid_paths = list(res.pid_paths)
         self.stores = res.stores
         self.next_pid = list(res.next_pids)
@@ -128,8 +135,10 @@ class OocBackend(MaintenanceBackend):
             self._build_dir = None
 
     def close(self) -> None:
-        """Release stores, pid files, and (if owned) the workdir."""
+        """Release stores, pid files, the pipeline executor, and (if
+        owned) the workdir."""
         self._dispose_build()
+        self.aio.close()
         if self._owns_workdir:
             shutil.rmtree(self.workdir, ignore_errors=True)
 
@@ -175,22 +184,29 @@ class OocBackend(MaintenanceBackend):
         self.io.count_sort(len(nodes), len(nodes) * 4)  # pid-file merge
 
     def append_pid_rows(self, j: int, values: np.ndarray) -> None:
+        """Grow pId_j by `values` rows: copy + append streamed through a
+        `Pipeline` into a StreamingWriter (prefetched reads, double-
+        buffered writes, atomic swap of the pid file)."""
         values = np.asarray(values).astype(np.int32)
         path = self.pid_paths[j]
         old = np.load(path, mmap_mode="r")
         n = old.shape[0]
-        tmp = path + ".tmp"
-        mm = open_memmap(tmp, mode="w+", dtype=np.int32,
-                         shape=(n + values.shape[0],))
         win = self.ooc.chunk_nodes
-        for s in range(0, n, win):
-            chunk = old[s:s + win]
-            mm[s:s + chunk.shape[0]] = chunk
-        mm[n:] = values
-        mm.flush()
-        del mm, old
+
+        def _chunks():
+            for s in range(0, n, win):
+                yield np.array(old[s:s + win])
+            yield values
+
+        writer = self.aio.writer(path, np.int32, n + values.shape[0])
+        try:
+            Pipeline(_chunks(), writer=writer, aio=self.aio).run()
+        except BaseException:
+            writer.abort()
+            raise
+        writer.close()
+        del old
         self._pid_mms.pop(j, None)
-        os.replace(tmp, path)
         self.io.count_scan(n, n * 4)
         self.io.count_sort(values.shape[0], values.nbytes)
 
@@ -284,21 +300,26 @@ class OocBackend(MaintenanceBackend):
         win = self.ooc.chunk_nodes
         for j, path in enumerate(self.pid_paths):
             old = np.load(path, mmap_mode="r")
-            tmp = path + ".tmp"
-            mm = open_memmap(tmp, mode="w+", dtype=np.int32,
-                             shape=(n_new,))
-            pos = 0
-            for s in range(0, old.shape[0], win):
-                chunk = np.asarray(old[s:s + win])
-                kmask = keep[s:s + chunk.shape[0]]
-                cnt = int(np.count_nonzero(kmask))
-                mm[pos:pos + cnt] = chunk[kmask]
-                pos += cnt
+
+            def _chunks(old=old):
+                for s in range(0, old.shape[0], win):
+                    yield s, np.array(old[s:s + win])
+
+            def _filter(item):
+                s, chunk = item
                 self.io.count_scan(chunk.shape[0], chunk.nbytes)
-            mm.flush()
-            del mm, old
+                return chunk[keep[s:s + chunk.shape[0]]]
+
+            writer = self.aio.writer(path, np.int32, n_new)
+            try:
+                Pipeline(_chunks(), transform=_filter, writer=writer,
+                         aio=self.aio).run()
+            except BaseException:
+                writer.abort()
+                raise
+            writer.close()
+            del old
             self._pid_mms.pop(j, None)
-            os.replace(tmp, path)
 
     # -------------------------------------------------------------- change k
     def truncate_k(self, new_k: int) -> None:

@@ -34,17 +34,25 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
-from numpy.lib.format import open_memmap
 
 from repro.core.kway import merge_sorted_sources
+
+from . import aio as aio_mod
 
 
 @dataclasses.dataclass
 class IOStats:
-    """Record/byte counters for the paper's sort/scan cost model."""
+    """Record/byte counters for the paper's sort/scan cost model.
+
+    With the async pipeline (`exmem.aio`) a stream's producer may charge
+    counters from its reader thread while the consumer charges its own,
+    so the increments are guarded by a lock — the *totals* stay exactly
+    equal with the pipeline on or off (every record is counted once, by
+    whichever thread runs the counting code)."""
 
     sort_cost: int = 0      # records pushed through external-sort passes
     scan_cost: int = 0      # records streamed sequentially
@@ -54,16 +62,29 @@ class IOStats:
     merge_passes: int = 0
     spills: int = 0         # SpillableSigStore runs flushed to disk
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
     def count_sort(self, records: int, nbytes: int) -> None:
-        self.sort_cost += int(records)
-        self.sort_bytes += int(nbytes)
+        with self._lock:
+            self.sort_cost += int(records)
+            self.sort_bytes += int(nbytes)
 
     def count_scan(self, records: int, nbytes: int) -> None:
-        self.scan_cost += int(records)
-        self.scan_bytes += int(nbytes)
+        with self._lock:
+            self.scan_cost += int(records)
+            self.scan_bytes += int(nbytes)
+
+    def bump(self, field: str, n: int = 1) -> None:
+        """Locked increment for the event counters (runs_written,
+        merge_passes, spills) — like the record counters, these may be
+        charged from a pipeline producer thread."""
+        with self._lock:
+            setattr(self, field, getattr(self, field) + int(n))
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
 
 
 def make_records(cols: dict) -> np.ndarray:
@@ -114,40 +135,56 @@ def rebuffer(chunks: Iterable[np.ndarray], rows: int) -> Iterator[np.ndarray]:
 
 def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
                  tmpdir: str, *, stats: Optional[IOStats] = None,
-                 prefix: str = "run") -> list:
+                 prefix: str = "run",
+                 aio: "Optional[aio_mod.AioConfig]" = None) -> list:
     """Run-formation pass: lexsort each chunk in memory, write one `.npy`
-    run per chunk. Returns the run paths (empty chunks are dropped)."""
+    run per chunk. Returns the run paths (empty chunks are dropped).
+
+    With ``aio`` enabled each run save lands on the shared executor, so
+    run ``i`` streams to disk while chunk ``i+1`` is being lexsorted —
+    the number of outstanding saves is bounded by ``aio.max_pending``.
+    Every save is atomic (temp file + rename) and fully drained before
+    the paths are returned."""
     os.makedirs(tmpdir, exist_ok=True)
     paths = []
-    for i, chunk in enumerate(chunks):
-        if chunk.shape[0] == 0:
-            continue
-        rec = lexsort_records(chunk, keys)
-        path = os.path.join(tmpdir, f"{prefix}_{i:06d}.npy")
-        np.save(path, rec)
-        paths.append(path)
-        if stats is not None:
-            stats.count_sort(rec.shape[0], rec.nbytes)
-            stats.runs_written += 1
+    saver = aio_mod.BoundedSaver(aio)
+    try:
+        for i, chunk in enumerate(chunks):
+            if chunk.shape[0] == 0:
+                continue
+            rec = lexsort_records(chunk, keys)
+            path = os.path.join(tmpdir, f"{prefix}_{i:06d}.npy")
+            saver.save(path, rec)
+            paths.append(path)
+            if stats is not None:
+                stats.count_sort(rec.shape[0], rec.nbytes)
+                stats.bump("runs_written")
+    finally:
+        saver.drain()
     return paths
 
 
 def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
                budget_rows: int = 1 << 16,
-               stats: Optional[IOStats] = None) -> Iterator[np.ndarray]:
+               stats: Optional[IOStats] = None,
+               aio: "Optional[aio_mod.AioConfig]" = None
+               ) -> Iterator[np.ndarray]:
     """Bounded-memory k-way merge of sorted runs; yields sorted chunks of at
     most ``budget_rows`` records. Total resident memory is one block of
     ``budget_rows // k`` records per live run (runs are memory-mapped).
 
     The merge loop is `repro.core.kway.merge_sorted_sources`; each run file
     maps onto a source of (key field views..., whole record array) columns,
-    so the records ride along their own key as the payload column."""
+    so the records ride along their own key as the payload column.  With
+    ``aio`` enabled each run is wrapped in a `ReadaheadArray`, so every
+    source's *next* input block is being read while the current one is
+    merged (one extra block per run resident — the double buffer)."""
     arrs = [np.load(p, mmap_mode="r") for p in paths]
     arrs = [a for a in arrs if a.shape[0]]
     if not arrs:
         return
     if stats is not None:
-        stats.merge_passes += 1
+        stats.bump("merge_passes")
     if len(arrs) == 1:
         # degenerate merge: one run is already sorted, stream it (scan)
         a = arrs[0]
@@ -157,6 +194,8 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
                 stats.count_scan(chunk.shape[0], chunk.nbytes)
             yield chunk
         return
+    if aio is not None and aio.enabled:
+        arrs = [aio.readahead(a) for a in arrs]
     sources = [tuple(a[k] for k in keys) + (a,) for a in arrs]
     for cols in merge_sorted_sources(sources, num_key_cols=len(keys),
                                      budget_rows=budget_rows):
@@ -167,32 +206,42 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
 
 
 def _merge_to_file(paths: Sequence[str], keys: Sequence[str], out_path: str,
-                   *, budget_rows: int,
-                   stats: Optional[IOStats]) -> str:
+                   *, budget_rows: int, stats: Optional[IOStats],
+                   aio: "Optional[aio_mod.AioConfig]" = None) -> str:
+    """Collapse several runs into one: the readahead merge feeds a
+    `StreamingWriter` through a `Pipeline` — reads, merge compute, and
+    the output write all overlap (when ``aio`` is enabled)."""
     total = sum(int(np.load(p, mmap_mode="r").shape[0]) for p in paths)
     dtype = np.load(paths[0], mmap_mode="r").dtype
-    mm = open_memmap(out_path, mode="w+", dtype=dtype, shape=(total,))
-    pos = 0
-    for chunk in merge_runs(paths, keys, budget_rows=budget_rows,
-                            stats=stats):
-        mm[pos:pos + chunk.shape[0]] = chunk
-        pos += chunk.shape[0]
-    mm.flush()
-    del mm
+    # intermediate merge outputs are scratch (rebuilt from the tables on
+    # any failure), so skip the per-file fsync
+    writer = (aio.writer(out_path, dtype, total, fsync=False)
+              if aio is not None
+              else aio_mod.StreamingWriter(out_path, dtype, total,
+                                           threaded=False, fsync=False))
+    with writer:
+        aio_mod.Pipeline(
+            merge_runs(paths, keys, budget_rows=budget_rows, stats=stats,
+                       aio=aio),
+            writer=writer).run()
     for p in paths:
         os.remove(p)
     if stats is not None:
-        stats.runs_written += 1
+        stats.bump("runs_written")
     return out_path
 
 
 def external_sort(chunks: Iterable[np.ndarray], keys: Sequence[str],
                   tmpdir: str, *, budget_rows: int = 1 << 16,
-                  fan_in: int = 16,
-                  stats: Optional[IOStats] = None) -> Iterator[np.ndarray]:
+                  fan_in: int = 16, stats: Optional[IOStats] = None,
+                  aio: "Optional[aio_mod.AioConfig]" = None
+                  ) -> Iterator[np.ndarray]:
     """Full external sort: run formation, intermediate merge passes while
-    the fan-in exceeds ``fan_in``, then the final streaming merge."""
-    paths = sort_to_runs(chunks, keys, tmpdir, stats=stats)
+    the fan-in exceeds ``fan_in``, then the final streaming merge.  The
+    optional ``aio`` pipeline threads every pass (async run saves,
+    readahead merge inputs, streamed intermediate writes) without
+    changing a single byte of any run or the `IOStats` accounting."""
+    paths = sort_to_runs(chunks, keys, tmpdir, stats=stats, aio=aio)
     level = 0
     while len(paths) > fan_in:
         merged = []
@@ -201,7 +250,8 @@ def external_sort(chunks: Iterable[np.ndarray], keys: Sequence[str],
             out = os.path.join(tmpdir, f"merge_{level}_{gi:06d}.npy")
             merged.append(_merge_to_file(group, keys, out,
                                          budget_rows=budget_rows,
-                                         stats=stats))
+                                         stats=stats, aio=aio))
         paths = merged
         level += 1
-    yield from merge_runs(paths, keys, budget_rows=budget_rows, stats=stats)
+    yield from merge_runs(paths, keys, budget_rows=budget_rows, stats=stats,
+                          aio=aio)

@@ -72,6 +72,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="oocore: SigStore entries resident before spill")
     ap.add_argument("--workdir", default=None,
                     help="oocore: spill directory (default: a tempdir)")
+    ap.add_argument("--io-threads", type=int, default=1,
+                    help="oocore: async I/O pipeline threads (prefetch "
+                         "readers / streaming writers / run saves); "
+                         "0 = fully synchronous")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="oocore: chunks buffered ahead per stream")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="oocore: disable the async I/O pipeline "
+                         "(same as --io-threads 0)")
     ap.add_argument("--no-early-stop", action="store_true")
     ap.add_argument("--out", default=None,
                     help="save pid history as .npz: one stacked 'pids' "
@@ -102,6 +111,23 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _io_threads(args) -> int:
+    return 0 if args.no_prefetch else args.io_threads
+
+
+def _report_overlap(aio_stats, compute_s: float) -> None:
+    """One-line overlap report: how long the consumer waited on reads vs
+    how long the fold/rank side ran (the paper's I/O-vs-compute split)."""
+    if aio_stats is None:
+        return
+    d = aio_stats.to_dict()
+    print(f"overlap: read_wait={d['read_wait_s']:.3f}s "
+          f"write_wait={d['write_wait_s']:.3f}s "
+          f"fold+rank={compute_s:.3f}s "
+          f"prefetched={d['chunks_prefetched']} "
+          f"streamed_writes={d['chunks_written']}")
+
+
 def _report_update(rep, dt: float, m) -> None:
     import numpy as np
     if rep is not None:
@@ -130,7 +156,8 @@ def run_maintenance(args, g: Graph) -> None:
         from repro.exmem import OocBackend
         backend = OocBackend(
             g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
-            spill_threshold=args.spill_threshold, workdir=args.workdir)
+            spill_threshold=args.spill_threshold, workdir=args.workdir,
+            io_threads=_io_threads(args), prefetch_depth=args.prefetch_depth)
         m = BisimMaintainer(backend, args.k, mode=args.mode)
     else:
         backend = None
@@ -166,7 +193,8 @@ def run_maintenance(args, g: Graph) -> None:
         remap = m.compact()
         print(f"compact: dropped {int((remap < 0).sum())} rows -> "
               f"{m.backend.num_nodes} nodes, {m.backend.num_edges} edges")
-    _report_update(rep, time.perf_counter() - t0, m)
+    dt = time.perf_counter() - t0
+    _report_update(rep, dt, m)
     if backend is not None:
         io1 = backend.io.to_dict()
         delta = {key: io1[key] - io0[key] for key in io1}
@@ -174,6 +202,7 @@ def run_maintenance(args, g: Graph) -> None:
               f"scan_cost={delta['scan_cost']} "
               f"sortB={delta['sort_bytes']} scanB={delta['scan_bytes']} "
               f"merges={delta['merge_passes']} spills={delta['spills']}")
+        _report_overlap(backend.aio.stats, dt)
         if args.workdir:
             print(f"workdir: {backend.workdir}")
         else:
@@ -195,7 +224,9 @@ def main() -> None:
             g, args.k, mode=args.mode, chunk_edges=args.chunk_edges,
             chunk_nodes=args.chunk_nodes, workdir=args.workdir,
             spill_threshold=args.spill_threshold,
-            early_stop=not args.no_early_stop)
+            early_stop=not args.no_early_stop,
+            io_threads=_io_threads(args),
+            prefetch_depth=args.prefetch_depth)
     elif args.distributed:
         res = build_bisim_distributed(
             g, args.k, mode=args.mode, ranking=args.ranking,
@@ -218,6 +249,7 @@ def main() -> None:
               f"sortB={io.sort_bytes} scanB={io.scan_bytes} "
               f"runs={io.runs_written} merges={io.merge_passes} "
               f"spills={io.spills}")
+        _report_overlap(res.aio, sum(s.seconds for s in res.stats))
         if args.workdir:
             print(f"workdir: {res.workdir}")
     if args.out:

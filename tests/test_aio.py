@@ -1,0 +1,323 @@
+"""Async I/O pipeline (repro.exmem.aio): primitive contracts, pipeline
+on/off bit-equivalence (partitions AND IOStats), and thread hygiene."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BisimMaintainer, SpillableSigStore
+from repro.exmem import OocBackend, build_bisim_oocore
+from repro.exmem.aio import (AioConfig, Pipeline, PrefetchReader,
+                             ReadaheadArray, StreamingWriter, atomic_save,
+                             live_aio_threads)
+from repro.graph import generators as gen
+
+MODES = ["sorted", "dedup_hash", "multiset"]
+
+
+def _assert_no_aio_threads(timeout: float = 2.0) -> None:
+    """All pipeline threads must be gone (GC-driven closes get a grace
+    period, deterministic closes pass immediately)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if not live_aio_threads():
+            return
+        time.sleep(0.01)
+    assert live_aio_threads() == []
+
+
+# --------------------------------------------------------- PrefetchReader
+def test_prefetch_reader_preserves_stream():
+    chunks = [np.arange(i, i + 3) for i in range(0, 30, 3)]
+    reader = PrefetchReader(iter(chunks), depth=2)
+    out = list(reader)
+    assert len(out) == len(chunks)
+    for a, b in zip(out, chunks):
+        np.testing.assert_array_equal(a, b)
+    _assert_no_aio_threads()
+
+
+def test_prefetch_reader_propagates_producer_exception():
+    def _boom():
+        yield np.arange(3)
+        raise RuntimeError("producer died")
+
+    reader = PrefetchReader(_boom(), depth=1)
+    assert next(reader).shape == (3,)
+    with pytest.raises(RuntimeError, match="producer died"):
+        for _ in reader:
+            pass
+    _assert_no_aio_threads()
+
+
+def test_prefetch_reader_close_mid_stream_joins_thread():
+    cleaned = []
+
+    def _slow():
+        try:
+            for i in range(1000):
+                yield np.full(8, i)
+        finally:
+            cleaned.append(True)  # upstream finally must run on close
+
+    reader = PrefetchReader(_slow(), depth=1)
+    assert int(next(reader)[0]) == 0
+    reader.close()
+    reader.close()  # idempotent
+    assert cleaned == [True]
+    _assert_no_aio_threads()
+    with pytest.raises(StopIteration):
+        next(reader)
+
+
+def test_prefetch_reader_consumer_exception_leaves_no_thread():
+    reader = PrefetchReader((np.arange(4) for _ in range(100)), depth=1)
+    with pytest.raises(ValueError):
+        with reader:
+            next(reader)
+            raise ValueError("consumer died mid-stream")
+    _assert_no_aio_threads()
+
+
+# -------------------------------------------------------- StreamingWriter
+@pytest.mark.parametrize("threaded", [False, True])
+def test_streaming_writer_roundtrip_and_atomicity(tmp_path, threaded):
+    path = str(tmp_path / "col.npy")
+    chunks = [np.arange(i, i + 5, dtype=np.int32) for i in range(0, 20, 5)]
+    w = StreamingWriter(path, np.int32, 20, threaded=threaded)
+    for c in chunks:
+        w.write(c)
+    assert not os.path.exists(path)  # nothing published before close
+    w.close()
+    np.testing.assert_array_equal(np.load(path), np.arange(20))
+    assert not os.path.exists(path + ".aio-tmp")
+    _assert_no_aio_threads()
+
+
+def test_streaming_writer_abort_discards(tmp_path):
+    path = str(tmp_path / "col.npy")
+    w = StreamingWriter(path, np.int32, 10, threaded=True)
+    w.write(np.arange(4, dtype=np.int32))
+    w.abort()
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".aio-tmp")
+    _assert_no_aio_threads()
+
+
+def test_streaming_writer_context_manager_aborts_on_error(tmp_path):
+    path = str(tmp_path / "col.npy")
+    with pytest.raises(RuntimeError):
+        with StreamingWriter(path, np.int32, 10, threaded=True) as w:
+            w.write(np.arange(4, dtype=np.int32))
+            raise RuntimeError("mid-write failure")
+    assert not os.path.exists(path)
+    _assert_no_aio_threads()
+
+
+def test_streaming_writer_worker_error_is_sticky(tmp_path):
+    """A worker failure must re-raise at write() AND at close(), and
+    close() must never publish the partial file."""
+    path = str(tmp_path / "col.npy")
+    w = StreamingWriter(path, np.int32, 4, threaded=True)
+    w.write(np.arange(10, dtype=np.int32))   # overruns the declared length
+    with pytest.raises(ValueError):
+        deadline = time.monotonic() + 2.0
+        while time.monotonic() < deadline:   # wait for the worker to hit it
+            w.write(np.arange(1, dtype=np.int32))
+            time.sleep(0.01)
+    with pytest.raises(ValueError):
+        w.close()
+    assert not os.path.exists(path)
+    _assert_no_aio_threads()
+
+
+def test_aioconfig_closed_submit_degrades_to_sync(tmp_path):
+    aio = AioConfig(io_threads=2, prefetch_depth=2)
+    aio.close()
+    path = str(tmp_path / "late.npy")
+    aio.save_async(path, np.arange(5)).result()   # sync, no new executor
+    np.testing.assert_array_equal(np.load(path), np.arange(5))
+    assert aio._executor is None
+
+
+def test_atomic_save_roundtrip(tmp_path):
+    path = str(tmp_path / "a.npy")
+    arr = np.arange(17, dtype=np.int64)
+    atomic_save(path, arr, fsync=True)
+    np.testing.assert_array_equal(np.load(path), arr)
+    assert not os.path.exists(path + ".aio-tmp")
+
+
+# --------------------------------------------------------------- Pipeline
+@pytest.mark.parametrize("io_threads", [0, 2])
+def test_pipeline_transform_to_writer(tmp_path, io_threads):
+    aio = AioConfig(io_threads=io_threads, prefetch_depth=2)
+    path = str(tmp_path / "out.npy")
+    src = [np.arange(i, i + 4, dtype=np.int32) for i in range(0, 16, 4)]
+    w = aio.writer(path, np.int32, 16)
+    n = Pipeline(iter(src), transform=lambda c: c * 2, writer=w,
+                 aio=aio).run()
+    w.close()
+    assert n == 4
+    np.testing.assert_array_equal(np.load(path), np.arange(16) * 2)
+    aio.close()
+    _assert_no_aio_threads()
+
+
+def test_pipeline_requires_exactly_one_sink():
+    with pytest.raises(ValueError):
+        Pipeline(iter([]), writer=None, sink=None)
+
+
+# --------------------------------------------------------- ReadaheadArray
+def test_readahead_array_matches_direct_reads(tmp_path):
+    rec = np.zeros(1000, dtype=np.dtype([("a", "<i4"), ("b", "<i4")]))
+    rec["a"] = np.arange(1000)
+    rec["b"] = np.arange(1000)[::-1]
+    path = str(tmp_path / "run.npy")
+    np.save(path, rec)
+    aio = AioConfig(io_threads=2, prefetch_depth=2)
+    ra = ReadaheadArray(np.load(path, mmap_mode="r"), aio)
+    assert ra.shape == (1000,)
+    # sequential fixed-size blocks (the k-way core's pattern), then a
+    # boundary-crossing and a backward (stale) request
+    for s in range(0, 1000, 64):
+        np.testing.assert_array_equal(np.array(ra[s:s + 64]),
+                                      rec[s:s + 64])
+        np.testing.assert_array_equal(ra.field("a")[s:s + 64],
+                                      rec["a"][s:s + 64])
+    np.testing.assert_array_equal(np.array(ra[100:164]), rec[100:164])
+    aio.close()
+
+
+# ----------------------------------------------- build on/off equivalence
+@pytest.mark.parametrize("gname", ["structured", "random", "powerlaw"])
+@pytest.mark.parametrize("mode", MODES)
+def test_build_prefetch_equivalence(tmp_path, gname, mode):
+    """Pipeline on vs off: bit-identical partitions and exactly equal
+    IOStats, with >= 4 edge chunks forced."""
+    g = {"structured": lambda: gen.structured_graph(120, seed=3),
+         "random": lambda: gen.random_graph(300, 900, 4, 3, seed=4),
+         "powerlaw": lambda: gen.powerlaw_graph(300, 900, 4, 3, seed=5),
+         }[gname]()
+    results = {}
+    for threads in (0, 2):
+        res = build_bisim_oocore(
+            g, 6, mode=mode, chunk_edges=128, spill_threshold=64,
+            workdir=str(tmp_path / f"t{threads}"), io_threads=threads,
+            prefetch_depth=1)
+        results[threads] = res
+    off, on = results[0], results[2]
+    assert off.io.runs_written >= 4          # multi-chunk forced
+    assert off.counts == on.counts
+    np.testing.assert_array_equal(off.pids, on.pids)  # bit-identical
+    assert off.io.to_dict() == on.io.to_dict()        # same cost model
+    off.cleanup()
+    on.cleanup()
+    _assert_no_aio_threads()
+
+
+def test_build_thread_cleanup_after_early_stop_and_error(tmp_path):
+    g = gen.structured_graph(90, seed=0)
+    res = build_bisim_oocore(g, 50, chunk_edges=64,
+                             workdir=str(tmp_path / "ok"), io_threads=2)
+    assert res.converged_at is not None  # early stop abandoned streams
+    res.cleanup()
+    _assert_no_aio_threads()
+    with pytest.raises(ValueError):
+        build_bisim_oocore(g, 3, mode="no-such-mode",
+                           workdir=str(tmp_path / "bad"), io_threads=2)
+    _assert_no_aio_threads()
+
+
+def test_build_error_mid_fold_leaves_no_thread(tmp_path, monkeypatch):
+    """An exception while the fold consumes the prefetched sorted stream
+    must close every reader/writer thread on the way out."""
+    import repro.exmem.build as build_mod
+
+    g = gen.random_graph(200, 600, 4, 3, seed=7)
+    real = build_mod._fold_sorted_stream
+    state = {"n": 0}
+
+    def _explodes(stream, chunk_edges, dedup, use_kernel=False):
+        for item in real(stream, chunk_edges, dedup, use_kernel):
+            state["n"] += 1
+            if state["n"] > 2:
+                raise RuntimeError("fold blew up mid-stream")
+            yield item
+
+    monkeypatch.setattr(build_mod, "_fold_sorted_stream", _explodes)
+    with pytest.raises(RuntimeError, match="fold blew up"):
+        build_bisim_oocore(g, 4, chunk_edges=64, io_threads=2,
+                           prefetch_depth=1)
+    _assert_no_aio_threads()
+
+
+# ------------------------------------------------- maintenance on/off
+def test_backend_prefetch_equivalence():
+    """The full update stream over OocBackend with the pipeline on vs off:
+    identical pids at every level and identical IOStats."""
+    g = gen.random_graph(250, 700, 4, 3, seed=11)
+    outs = {}
+    for threads in (0, 2):
+        backend = OocBackend(g, chunk_edges=128, spill_threshold=64,
+                             io_threads=threads, prefetch_depth=1)
+        m = BisimMaintainer(backend, 4, mode="sorted")
+        rng = np.random.default_rng(13)
+        src = rng.integers(0, 250, 5).astype(np.int32)
+        dst = rng.integers(0, 250, 5).astype(np.int32)
+        lab = rng.integers(0, 4, 5).astype(np.int32)
+        m.add_edges(src, lab, dst)
+        m.add_nodes(np.array([1, 2], dtype=np.int32))
+        m.delete_node(7)
+        m.compact()
+        pids = np.stack([backend.pid_column(j)
+                         for j in range(len(backend.pid_paths))])
+        outs[threads] = (pids, backend.io.to_dict())
+        backend.close()
+    np.testing.assert_array_equal(outs[0][0], outs[2][0])
+    assert outs[0][1] == outs[2][1]
+    _assert_no_aio_threads()
+
+
+# ------------------------------------------------------ spillable store
+def test_spillable_store_mmap_cache_is_lru_bounded(tmp_path):
+    store = SpillableSigStore(spill_threshold=8, max_runs=64,
+                              spill_dir=str(tmp_path), mmap_cache=4)
+    rng = np.random.default_rng(0)
+    next_pid = 0
+    for i in range(20):   # 20 spilled runs, far more than the cache
+        keys = rng.integers(0, 1 << 40, 16).astype(np.uint64)
+        _, next_pid = store.get_or_assign(keys, next_pid)
+    assert store.num_spilled_runs > 4
+    probe = rng.integers(0, 1 << 40, 64).astype(np.uint64)
+    store.lookup(probe)
+    assert len(store._mmaps) <= 4   # bounded even after probing all runs
+    store.close()
+
+
+def test_spillable_store_async_spills_match_sync(tmp_path):
+    aio = AioConfig(io_threads=2, prefetch_depth=2)
+    stores = {
+        "sync": SpillableSigStore(spill_threshold=16, max_runs=3,
+                                  spill_dir=str(tmp_path / "s")),
+        "async": SpillableSigStore(spill_threshold=16, max_runs=3,
+                                   spill_dir=str(tmp_path / "a"), aio=aio),
+    }
+    rng = np.random.default_rng(2)
+    batches = [rng.integers(0, 1 << 48, 40).astype(np.uint64)
+               for _ in range(12)]
+    outs = {}
+    for name, store in stores.items():
+        next_pid = 0
+        got = []
+        for b in batches:
+            pids, next_pid = store.get_or_assign(b, next_pid)
+            got.append(pids)
+        outs[name] = (np.concatenate(got), store.to_dict())
+    np.testing.assert_array_equal(outs["sync"][0], outs["async"][0])
+    assert outs["sync"][1] == outs["async"][1]
+    for store in stores.values():
+        store.close()
+    aio.close()
