@@ -28,7 +28,9 @@ def _holdout(g: Graph, rng) -> tuple:
 
 
 def run(scale: int = 1, k: int = 10, trials: int = 3):
-    rows = []
+    # the head-to-head first: its interleaved timing is the most
+    # sensitive row, so it runs before the big builds heat the machine
+    rows = list(run_device_vs_host(scale, trials=7))
     for name, g in list(suite(scale).items())[:4]:
         rng = np.random.default_rng(0)
         upd_times, build_times = [], []
@@ -75,3 +77,58 @@ def run(scale: int = 1, k: int = 10, trials: int = 3):
             f"rebuild_us={dt_build * 1e6:.0f};"
             f"speedup={dt_build / dt:.2f}x"))
     return rows
+
+
+def run_device_vs_host(scale: int = 1, k: int = 3, trials: int = 7):
+    """Device-vs-host propagation head-to-head (ISSUE 5).
+
+    Recompute the signatures of a fixed frontier of existing sources — a
+    pure propagation workload: nothing changes, so the run repeats
+    bit-identically and the two paths stay in the same state — through
+    the host (vectorized numpy) and device (jitted fold + device store
+    resolve) paths of the same update-semantics core.  The graph is the
+    regime the device path targets (ROADMAP: "very large frontiers"):
+    power-law with enough edges that a 2^17-node frontier gathers
+    ~500k out-edges per level.
+
+    Frontier sizes are powers of two so the device path's shape buckets
+    are exact; the first pass per size is an untimed compile warmup, and
+    the two paths are timed *interleaved* (best of `trials` rounds) so
+    host load drift cannot bias the comparison either way.
+    """
+    from repro.core import BisimMaintainer as BM  # local alias for clarity
+    from repro.graph import generators as gen
+    g = gen.powerlaw_graph(400_000 * scale, 1_600_000 * scale, 2, 2,
+                           seed=9)
+    uniq_src = np.unique(g.src)
+    rng = np.random.default_rng(1)
+    rows = []
+    for mode in ("multiset", "sorted"):
+        # rebuild_threshold > 1: the largest frontier must propagate,
+        # not trip the §4.2 switch-back
+        m_host = BM(g, k, rebuild_threshold=2.0, mode=mode)
+        m_dev = BM(g, k, rebuild_threshold=2.0, mode=mode, device=True)
+        for size in (1 << 12, 1 << 14, 1 << 17):
+            if size > uniq_src.size:
+                break
+            frontier = np.sort(rng.choice(uniq_src, size, replace=False))
+            frontier = frontier.astype(np.int64)
+            m_dev._propagate(frontier)   # compile warmup for this bucket
+            m_host._propagate(frontier)  # same treatment (cache warmth)
+            host_s, dev_s = 9e9, 9e9
+            for _ in range(trials):
+                host_s = min(host_s, _timed(m_host, frontier))
+                dev_s = min(dev_s, _timed(m_dev, frontier))
+            rows.append((
+                f"maintenance/powerlaw1p6M/{mode}/propagate_device_f{size}",
+                dev_s * 1e6,
+                f"frontier={size};host_us={host_s * 1e6:.0f};"
+                f"device_us={dev_s * 1e6:.0f};"
+                f"speedup={host_s / dev_s:.2f}x"))
+    return rows
+
+
+def _timed(m, frontier) -> float:
+    t0 = time.perf_counter()
+    m._propagate(frontier)
+    return time.perf_counter() - t0

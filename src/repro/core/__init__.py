@@ -7,21 +7,24 @@ Public API:
   BisimMaintainer          — Algorithms 2-4 (+ deletions, change-k)
   oracle_pids              — exact Definition-1 oracle for validation
 """
-from .partition import (BisimResult, IterationStats, build_bisim,
+from .partition import (BisimResult, IterationStats, bisim_step, build_bisim,
                         partition_blocks, refines, same_partition)
 from .distributed import (ShardedGraph, build_bisim_distributed,
                           make_flat_mesh, shard_graph)
+from .device_maint import DeviceSigStore, frontier_fold
 from .maintenance import (BisimMaintainer, InMemoryBackend,
                           MaintenanceBackend, MaintenanceReport)
 from .oracle import is_k_bisimilar, oracle_pids
-from .sig_store import SigStore, SpillableSigStore, fuse_key, label_key
+from .sig_store import (SigStore, SpillableSigStore, fuse_key, label_key,
+                        split_key)
 from . import hashes_np, signatures
 
 __all__ = [
-    "BisimResult", "IterationStats", "build_bisim", "partition_blocks",
-    "refines", "same_partition", "ShardedGraph", "build_bisim_distributed",
-    "make_flat_mesh", "shard_graph", "BisimMaintainer", "InMemoryBackend",
-    "MaintenanceBackend", "MaintenanceReport",
+    "BisimResult", "IterationStats", "bisim_step", "build_bisim",
+    "partition_blocks", "refines", "same_partition", "ShardedGraph",
+    "build_bisim_distributed", "make_flat_mesh", "shard_graph",
+    "BisimMaintainer", "InMemoryBackend", "MaintenanceBackend",
+    "MaintenanceReport", "DeviceSigStore", "frontier_fold",
     "is_k_bisimilar", "oracle_pids", "SigStore", "SpillableSigStore",
-    "fuse_key", "label_key", "hashes_np", "signatures",
+    "fuse_key", "label_key", "split_key", "hashes_np", "signatures",
 ]

@@ -1,0 +1,477 @@
+"""Device-resident maintenance propagation (paper §4 on the accelerator).
+
+`BisimMaintainer._propagate` recomputes frontier signatures and resolves
+them against the per-level store S.  The host path does both in
+vectorized numpy (`hashes_np` + `SigStore`); this module is the device
+path the maintainer switches to with ``device=True``:
+
+  * `frontier_fold` — pads a gathered frontier batch to power-of-two
+    buckets and folds it into sig hash pairs with the same mix-hash
+    lanes as construction (one jitted program per (edge-bucket,
+    node-bucket) shape).  Stage placement is adaptive and per-call
+    overridable: the set-semantics dedup sort (``device_sort``) and the
+    segment wrap-sum (``device_segsum``) run in-program on accelerators
+    but through numpy on CPU backends, where XLA's comparator sort and
+    sequential prefix sum measurably lose while its fused elementwise
+    hash measurably wins.  A per-frontier cache keeps the fold's device
+    constants (labels, boundaries, pId_0) resident across levels.  In
+    multiset mode with ``use_kernel=True`` the fold routes through the
+    Pallas `kernels.sig_fold` (single-block segmented sum).
+
+  * `DeviceSigStore` — a device mirror of the array-backed `SigStore`:
+    the sorted (hi, lo) u32 key lanes and the int32 pid column live as
+    device arrays padded to a power-of-two capacity with all-ones
+    sentinels.  `get_or_assign_pairs` is a sort-free jitted probe
+    (binary search over key pairs — the steady state of propagation,
+    where every signature is already in S) plus, on a miss, a jitted
+    mint plan (first-occurrence pid assignment) and a merge-insert
+    whose old columns are donated back to XLA.  Results are
+    bit-identical to
+    `SigStore.get_or_assign` (same probe keys -> same pids, same
+    next_pid), so device and host propagation agree bit-for-bit.  The
+    host `SigStore` is re-materialized lazily (`to_host`) only when the
+    store is extracted — between updates the columns never leave the
+    device.
+
+Keys are kept as two u32 lanes (not fused u64) because JAX runs without
+x64 and TPU vector units are 32-bit; lexicographic (hi, lo) order equals
+the host store's sorted u64 order, so `split_key`/`fuse_key` round-trip
+the columns exactly.
+
+Shape discipline: probe batches and store capacities are bucketed to
+powers of two, so the number of distinct XLA programs is O(log^2 N) over
+a session, not O(updates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashes_np
+from . import signatures as sig
+from .sig_store import SigStore, fuse_key, split_key
+
+_I32_MAX = np.iinfo(np.int32).max
+_SENT = jnp.uint32(0xFFFFFFFF)
+
+
+def bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(n, floor) (jit shape bucketing)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _prepare_batch(pid0_vals, seg, elabel, pid_tgt, num_sigs: int, *,
+                   dedup: bool, bounds, device_sort):
+    """Host-side prep for `frontier_fold`: dtype narrowing, optional
+    host-placed dedup, bucket padding.
+
+    Returns (p0, lab_p, tgt_p, bounds_p, seg_or_None, e, dedup_on_device)
+    — seg is materialized (padded) only when the device program still
+    needs it (device-placed dedup sort or the Pallas kernel route).
+    """
+    e = int(np.asarray(elabel).shape[0])
+    # 4-byte columns up front: the hash lanes wrap to u32 anyway (bit-
+    # compatible for these non-negative inputs), and both numpy's lexsort
+    # and the transfer move half the bytes
+    seg = np.asarray(seg).astype(np.int32, copy=False)
+    lab = np.asarray(elabel).astype(np.uint32, copy=False)
+    tgt = np.asarray(pid_tgt).astype(np.uint32, copy=False)
+    if bounds is None and e and (np.diff(seg) < 0).any():
+        # the gathers emit edges in (sorted) frontier order; the device
+        # segment combine (segment_wrapsum) relies on it.  A caller
+        # passing `bounds` asserts the grouping itself.
+        raise ValueError("frontier_fold requires ascending seg ids")
+    nb = bucket(num_sigs)
+    if device_sort is None:
+        # XLA CPU's comparator sort is several times slower than numpy's
+        # lexsort; on accelerators the sort belongs in the program
+        device_sort = jax.default_backend() != "cpu"
+    if dedup and not device_sort:
+        # host dedup: the numpy path's exact lexsort + boundary mask,
+        # compressing the batch before it ever crosses to the device
+        order = np.lexsort((tgt, lab, seg))
+        sseg, slab, stgt = seg[order], lab[order], tgt[order]
+        keep = np.ones(e, dtype=bool)
+        keep[1:] = ((sseg[1:] != sseg[:-1]) | (slab[1:] != slab[:-1])
+                    | (stgt[1:] != stgt[:-1]))
+        seg, lab, tgt = sseg[keep], slab[keep], stgt[keep]
+        e = int(seg.shape[0])
+        bounds = None  # boundaries moved; recompute below
+        dedup = False
+    if bounds is None:
+        bounds = np.searchsorted(seg, np.arange(num_sigs + 1))
+    eb = bucket(e)
+    lab_p = np.empty(eb, np.uint32)
+    lab_p[:e] = lab
+    lab_p[e:] = 0
+    tgt_p = np.empty(eb, np.uint32)
+    tgt_p[:e] = tgt
+    tgt_p[e:] = 0
+    p0 = np.zeros(nb, np.uint32)
+    p0[:num_sigs] = np.asarray(pid0_vals).astype(np.uint32)
+    bounds_p = np.full(nb + 1, e, np.int32)  # empty padding segments
+    bounds_p[: num_sigs + 1] = bounds
+    seg_p = None
+    if dedup:
+        seg_p = np.full(eb, nb, np.int32)    # >= num_sigs: sorts last, and
+        seg_p[:e] = seg                      # falls out of the segment sum
+    return p0, lab_p, tgt_p, bounds_p, seg_p, e, dedup
+
+
+@jax.jit
+def _edge_hash_pairs(elabel, pid_tgt):
+    """Per-edge signature hash lanes, fused on device — the one fold
+    stage that is faster under XLA on every backend (one pass, no numpy
+    temporaries)."""
+    return sig.hash_pair(elabel, pid_tgt)
+
+
+def _host_segsum_fold(lab_dev, tgt_p, seg, p0_vals, e: int, num_sigs: int):
+    """CPU arrangement of the fold: per-edge hash on device, wrap-add
+    combine + final mix on host (`np.add.at` beats XLA CPU's sequential
+    prefix sum).  Returns host (hi, lo) padded to ``bucket(num_sigs)``
+    so downstream probe shapes match the all-device arrangement."""
+    e_hi, e_lo = _edge_hash_pairs(lab_dev, jnp.asarray(tgt_p))
+    e_hi = np.asarray(e_hi)[:e]
+    e_lo = np.asarray(e_lo)[:e]
+    seg_hi = np.zeros(num_sigs, np.uint32)
+    seg_lo = np.zeros(num_sigs, np.uint32)
+    if e:
+        with np.errstate(over="ignore"):
+            np.add.at(seg_hi, seg[:e], e_hi)
+            np.add.at(seg_lo, seg[:e], e_lo)
+    hi, lo = hashes_np.hash_triple(seg_hi, seg_lo, np.asarray(p0_vals))
+    nb = bucket(num_sigs)
+    hi_p = np.zeros(nb, np.uint32)
+    hi_p[:num_sigs] = hi
+    lo_p = np.zeros(nb, np.uint32)
+    lo_p[:num_sigs] = lo
+    return hi_p, lo_p
+
+
+def frontier_fold(pid0_vals, seg, elabel, pid_tgt, num_sigs: int, *,
+                  dedup: bool = True, use_kernel: bool = False,
+                  bounds=None, device_sort: "bool | None" = None,
+                  device_segsum: "bool | None" = None,
+                  cache: "dict | None" = None, cache_key=None):
+    """Fold a gathered frontier batch into sig hash pairs on device.
+
+    Same contract as `hashes_np.signatures_from_edges` (and bit-identical
+    to it; `seg` must be ascending, as the gathers produce), but returns
+    *device* u32 arrays of length ``bucket(num_sigs)`` — entries past
+    ``num_sigs`` are padding garbage.  The caller can feed them straight
+    into `DeviceSigStore.get_or_assign_pairs` with ``count=num_sigs``
+    without a host round-trip.
+
+    ``bounds`` optionally passes the [num_sigs+1] segment boundaries when
+    the gather already knows them (CSR offsets); otherwise one host
+    searchsorted recovers them.  ``device_sort`` places the set-semantics
+    dedup sort: on accelerators it runs inside the jitted program; on CPU
+    backends (the default decision when None) it runs through numpy's
+    lexsort first and the deduplicated batch takes the segless device
+    fold, which also shrinks the transfer.  Either placement keeps
+    bit-parity: the dedup survivors are identical.
+
+    ``device_segsum`` places the segment wrap-sum: in-program via
+    `segment_wrapsum` on accelerators, on the host (``np.add.at`` over
+    the device-hashed lanes) on CPU backends, where XLA's sequential
+    prefix sum loses to numpy's fused scatter-add — measured, like the
+    sort placement; the per-edge hash stays on device either way.
+
+    ``cache`` (with ``cache_key``, an array identifying the frontier)
+    keeps the sort-free route's per-batch device constants — padded
+    labels, boundaries, pId_0 — resident between calls: propagation hits
+    every level with the same frontier while only pId_{j-1} changes, so
+    a hit transfers one column instead of four.  The dedup routes
+    reorder per level and bypass the cache.  The caller owns
+    invalidation on graph/pId_0 mutation.
+    """
+    if device_segsum is None:
+        device_segsum = jax.default_backend() != "cpu"
+    use_cache = (cache is not None and cache_key is not None
+                 and not dedup and not use_kernel)
+    if use_cache and cache.get("key") is not None \
+            and cache["e"] == int(np.asarray(pid_tgt).shape[0]) \
+            and cache.get("segsum") == device_segsum \
+            and np.array_equal(cache["key"], cache_key):
+        e = cache["e"]
+        eb = cache["lab_dev"].shape[0]
+        tgt_p = np.empty(eb, np.uint32)
+        tgt_p[:e] = np.asarray(pid_tgt).astype(np.uint32, copy=False)
+        tgt_p[e:] = 0
+        if not device_segsum:
+            return _host_segsum_fold(
+                cache["lab_dev"], tgt_p, np.asarray(seg), cache["p0"], e,
+                num_sigs)
+        return sig.frontier_signature_hashes_presorted(
+            cache["p0_dev"], cache["lab_dev"], jnp.asarray(tgt_p),
+            cache["bounds_dev"], jnp.int32(e),
+            num_sigs=cache["p0_dev"].shape[0])
+    p0, lab_p, tgt_p, bounds_p, seg_p, e, dedup_dev = _prepare_batch(
+        pid0_vals, seg, elabel, pid_tgt, num_sigs, dedup=dedup,
+        bounds=bounds, device_sort=device_sort)
+    nb = p0.shape[0]
+    if not dedup_dev and not use_kernel:
+        lab_dev = jnp.asarray(lab_p)
+        if not device_segsum:
+            # CPU: the dedup (if any) already ran on host above; hash on
+            # device, combine on host
+            if use_cache:
+                cache.update(key=np.asarray(cache_key).copy(), e=e,
+                             segsum=False, lab_dev=lab_dev,
+                             p0=np.asarray(pid0_vals))
+            if dedup:  # host-deduplicated batch: seg was compressed too
+                seg = None  # recovered from bounds below
+            return _host_segsum_fold(
+                lab_dev, tgt_p,
+                np.asarray(seg) if seg is not None else
+                np.repeat(np.arange(num_sigs),
+                          np.diff(bounds_p[: num_sigs + 1])),
+                np.asarray(pid0_vals), e, num_sigs)
+        p0_dev = jnp.asarray(p0)
+        bounds_dev = jnp.asarray(bounds_p)
+        if use_cache:
+            # the padded device columns are frontier constants
+            cache.update(key=np.asarray(cache_key).copy(), e=e,
+                         segsum=True, p0_dev=p0_dev, lab_dev=lab_dev,
+                         bounds_dev=bounds_dev)
+        return sig.frontier_signature_hashes_presorted(
+            p0_dev, lab_dev, jnp.asarray(tgt_p), bounds_dev,
+            jnp.int32(e), num_sigs=nb)
+    if seg_p is None:  # kernel route without dedup: seg not padded yet
+        eb = lab_p.shape[0]
+        seg_p = np.full(eb, nb, np.int32)
+        seg_p[:e] = np.asarray(seg).astype(np.int32, copy=False)
+    return sig.frontier_signature_hashes(
+        jnp.asarray(p0), jnp.asarray(seg_p), jnp.asarray(lab_p),
+        jnp.asarray(tgt_p), jnp.asarray(bounds_p), jnp.int32(e),
+        num_sigs=nb, dedup=dedup, use_kernel=use_kernel)
+
+
+def _searchsorted_pairs(khi, klo, qhi, qlo):
+    """'left' insertion positions of (qhi, qlo) into the sorted pair
+    columns (khi, klo): a vectorized branchless binary search (the
+    capacity is static, so the step count unrolls to log2(cap)+1)."""
+    cap = khi.shape[0]
+    lo = jnp.zeros(qhi.shape, jnp.int32)
+    hi = jnp.full(qhi.shape, cap, jnp.int32)
+
+    def body(_, bounds):
+        lo, hi = bounds
+        cont = lo < hi  # converged lanes must stay put (fixed step count)
+        mid = (lo + hi) >> 1
+        vh = khi[mid]
+        vl = klo[mid]
+        less = (vh < qhi) | ((vh == qhi) & (vl < qlo))  # store key < probe
+        return (jnp.where(cont & less, mid + 1, lo),
+                jnp.where(cont & ~less, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, int(cap).bit_length(), body, (lo, hi))
+    return lo
+
+
+@jax.jit
+def _probe_step(khi, klo, kpid, qhi, qlo, count, size):
+    """Probe-only fast path: binary search + gather, no sort.  In steady
+    propagation most frontier signatures already live in S, so the
+    common resolve is this program plus one (out, n_miss) transfer; the
+    mint plan below only runs when something was actually novel."""
+    cap = khi.shape[0]
+    p = qhi.shape[0]
+    valid = jnp.arange(p, dtype=jnp.int32) < count
+    idx = _searchsorted_pairs(khi, klo, qhi, qlo)
+    idxc = jnp.minimum(idx, cap - 1)
+    found = (khi[idxc] == qhi) & (klo[idxc] == qlo) & (idx < size) & valid
+    out = jnp.where(found, kpid[idxc], jnp.int32(-1))
+    n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
+    return out, n_miss
+
+
+@jax.jit
+def _resolve_step(khi, klo, kpid, qhi, qlo, count, size, next_pid):
+    """Probe + mint plan: one program per (capacity, probe) bucket pair.
+
+    Mirrors `SigStore.get_or_assign` exactly: found keys return their
+    stored pid; novel keys mint ``next_pid + rank`` where rank is the
+    order of first occurrence in the probe batch.  Returns everything the
+    merge step needs so nothing is recomputed on insert.
+    """
+    cap = khi.shape[0]
+    p = qhi.shape[0]
+    valid = jnp.arange(p, dtype=jnp.int32) < count
+    idx = _searchsorted_pairs(khi, klo, qhi, qlo)
+    idxc = jnp.minimum(idx, cap - 1)
+    found = (khi[idxc] == qhi) & (klo[idxc] == qlo) & (idx < size) & valid
+    out = jnp.where(found, kpid[idxc], jnp.int32(-1))
+    miss = jnp.logical_and(valid, ~found)
+    # group the missing keys (sentinel-masked so found/padding sort last);
+    # miss-before-masked then position as tiebreaks, so each group head is
+    # the key's first occurrence even for a genuine all-ones key sharing
+    # the sentinel value with masked lanes (the same defense the merge
+    # step applies with its real-before-sentinel flag)
+    mh = jnp.where(miss, qhi, _SENT)
+    ml = jnp.where(miss, qlo, _SENT)
+    pos = jnp.arange(p, dtype=jnp.int32)
+    order = jnp.lexsort((pos, (~miss).astype(jnp.uint32), ml, mh))
+    sh = mh[order]
+    sl = ml[order]
+    sidx = pos[order]
+    smiss = miss[order]
+    head = jnp.concatenate([
+        jnp.ones((1,), bool), (sh[1:] != sh[:-1]) | (sl[1:] != sl[:-1])])
+    is_first = head & smiss
+    gid = (jnp.cumsum(head) - 1).astype(jnp.int32)
+    # appearance rank of each novel head = #novel heads at earlier probe
+    # positions (matches the numpy store's double-argsort of `first`)
+    head_pos = jnp.where(is_first, sidx, jnp.int32(p))
+    rank = jnp.argsort(jnp.argsort(head_pos)).astype(jnp.int32)
+    app = jax.ops.segment_max(jnp.where(is_first, rank, 0), gid,
+                              num_segments=p)
+    minted = next_pid + app[gid]
+    out = out.at[sidx].set(jnp.where(smiss, minted, out[sidx]))
+    n_novel = jnp.sum(is_first).astype(jnp.int32)
+    return out, n_novel, sh, sl, minted, is_first
+
+
+def _merge_step_impl(khi, klo, kpid, sh, sl, minted, is_first, size, *,
+                     new_cap: int):
+    """Merge the minted novel keys into the sorted columns; re-bucket to
+    `new_cap`.  The old columns are donated (see `_merge_step`), so the
+    store keeps a constant number of live buffers on accelerators."""
+    cap = khi.shape[0]
+    p = sh.shape[0]
+    ch = jnp.concatenate([khi, jnp.where(is_first, sh, _SENT)])
+    cl = jnp.concatenate([klo, jnp.where(is_first, sl, _SENT)])
+    cp = jnp.concatenate([kpid, jnp.where(is_first, minted, 0)])
+    # real-before-sentinel tiebreak: a genuine all-ones key must beat the
+    # padding sentinels, or its pid would be sliced away below
+    pad = jnp.concatenate([
+        (jnp.arange(cap, dtype=jnp.int32) >= size), ~is_first,
+    ]).astype(jnp.uint32)
+    order = jnp.lexsort((pad, cl, ch))
+    ch, cl, cp = ch[order], cl[order], cp[order]
+    if new_cap <= cap + p:
+        return ch[:new_cap], cl[:new_cap], cp[:new_cap]
+    extra = new_cap - (cap + p)
+    return (jnp.concatenate([ch, jnp.full(extra, _SENT)]),
+            jnp.concatenate([cl, jnp.full(extra, _SENT)]),
+            jnp.concatenate([cp, jnp.zeros(extra, jnp.int32)]))
+
+
+_merge_step_jit = None
+
+
+def _merge_step(*args, new_cap: int):
+    """Jit `_merge_step_impl` lazily: donation is decided per backend (CPU
+    ignores it and warns), mirroring `partition._bisim_step`."""
+    global _merge_step_jit
+    if _merge_step_jit is None:
+        donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
+        _merge_step_jit = jax.jit(
+            _merge_step_impl, static_argnames=("new_cap",),
+            donate_argnums=donate)
+    return _merge_step_jit(*args, new_cap=new_cap)
+
+
+class DeviceSigStore:
+    """Device mirror of one level's `SigStore` (sorted key/pid columns as
+    device arrays; probe + merge-insert run on device).
+
+    The mirror is authoritative once created: every resolve goes through
+    it, and the host `SigStore` is re-materialized lazily by `to_host()`
+    (cached until the next insert dirties it) — the paper's S leaves the
+    device only on store extraction.
+    """
+
+    __slots__ = ("khi", "klo", "kpid", "size", "_host")
+
+    def __init__(self, host: SigStore):
+        keys = np.asarray(host.keys)
+        pids = np.asarray(host.pids)
+        if pids.size and int(pids.max()) > _I32_MAX:
+            raise OverflowError(
+                "device store mirrors pids as int32; rebuild to re-densify")
+        self.size = int(keys.shape[0])
+        cap = bucket(self.size)
+        hi, lo = split_key(keys)
+        khi = np.full(cap, 0xFFFFFFFF, np.uint32)
+        klo = np.full(cap, 0xFFFFFFFF, np.uint32)
+        kpid = np.zeros(cap, np.int32)
+        khi[:self.size] = hi
+        klo[:self.size] = lo
+        kpid[:self.size] = pids.astype(np.int32)
+        self.khi = jnp.asarray(khi)
+        self.klo = jnp.asarray(klo)
+        self.kpid = jnp.asarray(kpid)
+        self._host = host
+
+    def __len__(self) -> int:
+        return self.size
+
+    # ------------------------------------------------------------- resolve
+    def get_or_assign_pairs(self, qhi, qlo, count: int,
+                            next_pid: int) -> tuple[np.ndarray, int]:
+        """Bulk get-or-assign over bucket-padded (hi, lo) probe lanes.
+
+        `qhi`/`qlo` may be device arrays straight out of `frontier_fold`
+        (no host round-trip) or bucket-padded numpy arrays; only the first
+        `count` entries are real probes.  Returns (pids int64 [count],
+        next_pid') — bit-identical to `SigStore.get_or_assign` on the
+        fused keys.
+
+        The all-found case (the steady state of propagation) costs one
+        sort-free probe program; the mint + merge-insert plan runs only
+        when the probe reports misses.
+        """
+        qhi = jnp.asarray(qhi)
+        qlo = jnp.asarray(qlo)
+        out, n_miss = _probe_step(
+            self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
+            jnp.int32(self.size))
+        if int(n_miss) == 0:
+            return np.asarray(out[:count]).astype(np.int64), next_pid
+        out, n_novel, sh, sl, minted, is_first = _resolve_step(
+            self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
+            jnp.int32(self.size), jnp.int32(next_pid))
+        n = int(n_novel)
+        if n:
+            if next_pid + n > _I32_MAX:
+                raise OverflowError(
+                    "device store pid space exceeded int32; rebuild to "
+                    "re-densify pids")
+            new_size = self.size + n
+            self.khi, self.klo, self.kpid = _merge_step(
+                self.khi, self.klo, self.kpid, sh, sl, minted, is_first,
+                jnp.int32(self.size), new_cap=bucket(new_size))
+            self.size = new_size
+            self._host = None  # mirrored back lazily on extraction
+        return np.asarray(out[:count]).astype(np.int64), next_pid + n
+
+    def get_or_assign_keys(self, keys, next_pid: int) -> tuple[np.ndarray,
+                                                               int]:
+        """Host-key entry point (fused u64 keys, e.g. level-0 label keys):
+        split, bucket-pad, resolve on device."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        count = int(keys.shape[0])
+        p = bucket(count)
+        hi, lo = split_key(keys)
+        qhi = np.zeros(p, np.uint32)
+        qlo = np.zeros(p, np.uint32)
+        qhi[:count] = hi
+        qlo[:count] = lo
+        return self.get_or_assign_pairs(qhi, qlo, count, next_pid)
+
+    # ------------------------------------------------------------ mirroring
+    def to_host(self) -> SigStore:
+        """Materialize the mirrored store on host (sorted u64 keys + int64
+        pids — the exact `SigStore` the host path would hold)."""
+        if self._host is None:
+            kh, kl, kp = jax.device_get((self.khi, self.klo, self.kpid))
+            self._host = SigStore(
+                fuse_key(kh[: self.size], kl[: self.size]),
+                np.asarray(kp[: self.size], dtype=np.int64), presorted=True)
+        return self._host

@@ -29,28 +29,71 @@ per-level stores sharing one schema.
 Signature modes: the paper's set semantics (`sorted` / `dedup_hash`, which
 hash identically here) plus `multiset` — counting bisimulation, maintained
 by skipping the (eLabel, pId) dedup exactly as construction does.
+
+Device-resident propagation (``BisimMaintainer(..., device=True)``): the
+two hot pieces of `_propagate` — the frontier signature fold and the
+store resolve — move onto the accelerator through `core.device_maint`.
+The contract:
+
+  * what runs on device — the frontier signature fold
+    (`frontier_signatures_device`, one jitted program per power-of-two
+    shape bucket, constants cached on device across levels) and, for
+    backends that mirror their stores (`InMemoryBackend`), the S_j
+    probe + first-occurrence minting + merge-insert (`DeviceSigStore`,
+    donated sorted columns).  `OocBackend` folds on device after its
+    sequential merge-join gather and keeps resolving through the
+    spillable host store (S must outgrow RAM there by design).
+  * stage placement is adaptive (`device_maint`): the dedup sort and
+    the segment wrap-sum run in-program on accelerators but through
+    numpy on CPU backends (XLA CPU's comparator sort and sequential
+    prefix sum measurably lose to lexsort/np.add.at, the fused per-edge
+    hash measurably wins) — overridable per call, bit-identical either
+    way.
+  * what stays on host — frontier bookkeeping (np.unique / union1d),
+    parent gathers, graph mutations, and every I/O pass; the per-level
+    host traffic is the resolved frontier pids (needed for the changed
+    mask) plus one minted-count scalar.
+  * the fallback — backends without the capability (`enable_device`
+    returning False) silently stay on the vectorized numpy path, which
+    also remains the differential reference.
+  * the bit-parity invariant — device and host propagation produce
+    bit-identical pid histories, next_pid sequences and (for disk
+    backends) IOStats over any update stream: the device fold replays
+    the exact `hashes_np` lanes and `DeviceSigStore.get_or_assign_pairs`
+    replays `SigStore.get_or_assign` minting order.  The differential
+    fuzz harness (`tests/test_update_fuzz.py`) asserts this after every
+    update of randomized streams.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
+import time
 from typing import Iterable, Optional
 
 import numpy as np
 
 from repro.graph.storage import Graph
 from . import hashes_np
-from .partition import BisimResult, build_bisim
+from .partition import BisimResult, bisim_step, build_bisim
 from .sig_store import SigStore, fuse_key, label_key
 
 
 @dataclasses.dataclass
 class MaintenanceReport:
-    """Per-update statistics (the quantities of paper Figs. 7-8)."""
+    """Per-update statistics (the quantities of paper Figs. 7-8).
+
+    The per-level lists always have exactly k entries — levels the
+    propagation never reached (empty frontier, or the §4.2 rebuild
+    heuristic firing mid-loop) hold zeros — so report consumers may
+    index by level unconditionally.
+    """
     nodes_checked: list          # per level j=1..k
     nodes_changed: list          # per level
     partitions_touched: list     # per level
     rebuilt: bool = False
+    level_seconds: list = dataclasses.field(default_factory=list)
+    device: bool = False         # device propagation path taken
 
 
 # the CSR frontier gather is shared with the batch signature path
@@ -137,6 +180,40 @@ class MaintenanceBackend(abc.ABC):
         fused signature keys to pids, minting dense fresh pids for novel
         keys in first-occurrence order."""
 
+    # ---------------------------------------------------- device capability
+    def enable_device(self) -> bool:
+        """Opt into device-resident propagation.  Returns False when the
+        backend has no device path (the maintainer then stays on the host
+        fallback); backends that return True must implement
+        `frontier_signatures_device`."""
+        return False
+
+    def frontier_signatures_device(self, j: int, frontier: np.ndarray, *,
+                                   dedup: bool = True):
+        """Device sibling of `frontier_signatures`: (hi, lo) *device* u32
+        arrays, bucket-padded past ``frontier.size`` (garbage tail).
+        None signals the capability is absent and the caller must take
+        the host path."""
+        return None
+
+    def resolve_pairs(self, j: int, hi, lo, count: int) -> np.ndarray:
+        """`resolve` over bucket-padded (hi, lo) hash lanes (only the
+        first `count` are real) — the device fold feeds this without a
+        host round-trip.  Default: fuse on host and resolve there."""
+        return self.resolve(
+            j, fuse_key(np.asarray(hi)[:count], np.asarray(lo)[:count]))
+
+    def propagate_level_device(self, j: int, frontier: np.ndarray, *,
+                               dedup: bool = True):
+        """One device propagation level: fold + resolve.  Default
+        composes the two capability methods; backends that mirror their
+        store on device may fuse both into a single program.  None when
+        the capability is absent."""
+        pair = self.frontier_signatures_device(j, frontier, dedup=dedup)
+        if pair is None:
+            return None
+        return self.resolve_pairs(j, pair[0], pair[1], frontier.size)
+
     # -------------------------------------------------------------- gathers
     @abc.abstractmethod
     def frontier_signatures(self, j: int, frontier: np.ndarray, *,
@@ -191,10 +268,51 @@ class InMemoryBackend(MaintenanceBackend):
     combine), resolution is one bulk `SigStore.get_or_assign`, and
     parent propagation is a vectorized gather over the in-CSR.  No
     per-node Python loops on the propagation path.
+
+    With `enable_device()` the per-level stores are mirrored into
+    `DeviceSigStore`s (sorted columns as donated device arrays) which
+    become authoritative: every resolve — propagation and `add_nodes`
+    alike — runs the device probe/mint/merge-insert, and the host
+    `SigStore`s the `stores` property returns are lazy re-extractions.
     """
 
     def __init__(self, graph: Graph):
         self.graph = graph
+        self._device = False
+        self._store_on_device = False
+        self._dstores: Optional[list] = None
+        self._stores: Optional[list] = None
+        self._fold_cache: dict = {}
+
+    # ----------------------------------------------------- device capability
+    def enable_device(self, store_on_device: bool = True) -> bool:
+        """Switch propagation onto the device.  ``store_on_device=False``
+        keeps the S_j probe/mint on the host `SigStore` (only the fold
+        moves off-host, the OocBackend arrangement) — pids are
+        bit-identical either way, and the first decision is sticky
+        across rebuilds."""
+        if not self._device:
+            self._device = True
+            self._store_on_device = bool(store_on_device)
+            if self._stores is not None and self._store_on_device:
+                self._mirror_stores()
+        return True
+
+    def _mirror_stores(self) -> None:
+        from .device_maint import DeviceSigStore
+        self._dstores = [DeviceSigStore(s) for s in self._stores]
+        # the mirrors are authoritative from here on: drop the host list
+        # rather than keep silently-stale entries alive (the `stores`
+        # property re-materializes from the mirrors on demand)
+        self._stores = None
+
+    @property
+    def stores(self) -> list:
+        """Per-level stores; in device mode each is lazily re-materialized
+        from the authoritative device mirror."""
+        if self._dstores is not None:
+            return [d.to_host() for d in self._dstores]
+        return self._stores
 
     # ------------------------------------------------------------ geometry
     @property
@@ -215,14 +333,19 @@ class InMemoryBackend(MaintenanceBackend):
         # pid history as mutable int64 (new pids can exceed int32 eventually)
         self.pids = [np.array(res.pids[j], dtype=np.int64)
                      for j in range(k + 1)]
-        self.stores = res.stores     # list[SigStore]; [0] keyed by label
+        self._stores = res.stores    # list[SigStore]; [0] keyed by label
         self.next_pid = list(res.next_pid)
         self._refresh_indexes()
+        if self._device and self._store_on_device:
+            self._mirror_stores()    # a rebuild re-mirrors from scratch
 
     def _refresh_indexes(self) -> None:
         self.out_off = self.graph.out_offsets()
         self.in_ord = self.graph.in_order()
         self.in_off = self.graph.in_offsets()
+        # every graph mutation funnels through here: drop the fold
+        # batch's cached device constants (labels/bounds/pId_0)
+        self._fold_cache = {}
 
     # ---------------------------------------------------------- pid history
     def pid_column(self, j: int) -> np.ndarray:
@@ -241,20 +364,57 @@ class InMemoryBackend(MaintenanceBackend):
 
     # ---------------------------------------------------------------- store
     def resolve(self, j: int, keys: np.ndarray) -> np.ndarray:
-        out, self.next_pid[j] = self.stores[j].get_or_assign(
+        if self._dstores is not None:
+            out, self.next_pid[j] = self._dstores[j].get_or_assign_keys(
+                keys, self.next_pid[j])
+            return out
+        out, self.next_pid[j] = self._stores[j].get_or_assign(
             keys, self.next_pid[j])
         return out
 
+    def resolve_pairs(self, j: int, hi, lo, count: int) -> np.ndarray:
+        if self._dstores is not None:
+            out, self.next_pid[j] = self._dstores[j].get_or_assign_pairs(
+                hi, lo, count, self.next_pid[j])
+            return out
+        return super().resolve_pairs(j, hi, lo, count)
+
     # -------------------------------------------------------------- gathers
+    def _gather_frontier(self, j: int, frontier: np.ndarray):
+        """(pid0, seg, elabel, pid_tgt) of the frontier's out-edges — the
+        shared input of the host and device signature folds."""
+        pid_prev = self.pids[j - 1]
+        idx, seg = _csr_gather(self.out_off, frontier)
+        return (self.pids[0][frontier], seg, self.graph.elabel[idx],
+                pid_prev[self.graph.dst[idx]])
+
     def frontier_signatures(self, j: int, frontier: np.ndarray, *,
                             dedup: bool = True):
         # gather only the frontier's out-edges (cost O(frontier edges),
         # not O(|E|)) and resolve their targets' pId_{j-1}
-        pid_prev = self.pids[j - 1]
-        idx, seg = _csr_gather(self.out_off, frontier)
+        p0, seg, lab, pid_tgt = self._gather_frontier(j, frontier)
         return hashes_np.signatures_from_edges(
-            self.pids[0][frontier], seg, self.graph.elabel[idx],
-            pid_prev[self.graph.dst[idx]], frontier.size, dedup=dedup)
+            p0, seg, lab, pid_tgt, frontier.size, dedup=dedup)
+
+    def _frontier_bounds(self, frontier: np.ndarray) -> np.ndarray:
+        """Segment boundaries of the frontier gather — free from CSR."""
+        cnts = (self.out_off[frontier + 1]
+                - self.out_off[frontier]).astype(np.int64)
+        bounds = np.zeros(frontier.size + 1, np.int64)
+        np.cumsum(cnts, out=bounds[1:])
+        return bounds
+
+    def frontier_signatures_device(self, j: int, frontier: np.ndarray, *,
+                                   dedup: bool = True):
+        if not self._device:
+            return None
+        from .device_maint import frontier_fold
+        p0, seg, lab, pid_tgt = self._gather_frontier(j, frontier)
+        return frontier_fold(p0, seg, lab, pid_tgt, frontier.size,
+                             dedup=dedup,
+                             bounds=self._frontier_bounds(frontier),
+                             cache=self._fold_cache, cache_key=frontier)
+
 
     def parents_of(self, nodes: np.ndarray) -> np.ndarray:
         idx, _ = _csr_gather(self.in_off, nodes)
@@ -299,12 +459,15 @@ class InMemoryBackend(MaintenanceBackend):
     # -------------------------------------------------------------- change k
     def truncate_k(self, new_k: int) -> None:
         self.pids = self.pids[: new_k + 1]
-        self.stores = self.stores[: new_k + 1]
+        if self._stores is not None:
+            self._stores = self._stores[: new_k + 1]
+        if self._dstores is not None:
+            self._dstores = self._dstores[: new_k + 1]
         self.next_pid = self.next_pid[: new_k + 1]
 
     def extend_k(self, new_k: int, mode: str) -> None:
-        # run additional iterations bottom-up from the stored pId_k
-        from . import signatures as sig
+        # run additional iterations bottom-up from the stored pId_k,
+        # through the same fused sig->rank program the build loop caches
         import jax.numpy as jnp
         cur_k = len(self.pids) - 1
         pid0 = jnp.asarray(self.pids[0].astype(np.int32))
@@ -313,13 +476,19 @@ class InMemoryBackend(MaintenanceBackend):
         elab = jnp.asarray(self.graph.elabel)
         pid_prev = jnp.asarray(self.pids[cur_k].astype(np.int32))
         for j in range(cur_k + 1, new_k + 1):
-            hi, lo = sig.signature_hashes(
+            # pid_prev is donated (a buffer this loop owns); the host
+            # copies below are taken before the next step consumes it
+            _, pid_new, count, hi, lo = bisim_step(
                 pid0, src, dst, elab, pid_prev,
                 num_nodes=self.graph.num_nodes, mode=mode)
-            pid_new, count = sig.dense_rank_pairs(hi, lo)
             pid_np = np.asarray(pid_new)
-            self.stores.append(SigStore.from_hash_pairs(
-                np.asarray(hi), np.asarray(lo), pid_np))
+            store = SigStore.from_hash_pairs(
+                np.asarray(hi), np.asarray(lo), pid_np)
+            if self._dstores is not None:
+                from .device_maint import DeviceSigStore
+                self._dstores.append(DeviceSigStore(store))
+            else:
+                self._stores.append(store)
             self.next_pid.append(int(count))
             self.pids.append(pid_np.astype(np.int64))
             pid_prev = pid_new
@@ -331,11 +500,17 @@ class BisimMaintainer:
 
     Pass a `Graph` (wrapped in `InMemoryBackend`) or a ready backend such
     as `repro.exmem.maintenance.OocBackend`.
+
+    ``device=True`` asks the backend for device-resident propagation
+    (see the module docstring's contract); backends without the
+    capability silently keep the host path, and `self.device` reports
+    which one is active.
     """
 
     def __init__(self, graph, k: int, *, mode: str = "sorted",
                  rebuild_threshold: float = 0.5,
-                 result: Optional[BisimResult] = None):
+                 result: Optional[BisimResult] = None,
+                 device: bool = False):
         if mode not in ("sorted", "dedup_hash", "multiset"):
             raise ValueError(f"unknown signature mode: {mode}")
         self.k = k
@@ -347,6 +522,7 @@ class BisimMaintainer:
         # compact() later drops the flagged rows and remaps ids.
         self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
         self.backend.build(k, mode, result=result)
+        self.device = bool(device) and self.backend.enable_device()
 
     # ------------------------------------------------------------- queries
     @property
@@ -468,27 +644,42 @@ class BisimMaintainer:
         return int(self._tombstone.sum())
 
     # ------------------------------------------------------- propagation
+    def _pad_report(self, report: MaintenanceReport) -> MaintenanceReport:
+        """Pad the per-level lists to k entries (zeros) — the §4.2 rebuild
+        returns mid-loop, and consumers index by level."""
+        while len(report.nodes_checked) < self.k:
+            report.nodes_checked.append(0)
+            report.nodes_changed.append(0)
+            report.partitions_touched.append(0)
+            report.level_seconds.append(0.0)
+        return report
+
     def _propagate(self, frontier0: np.ndarray) -> MaintenanceReport:
         n = self.backend.num_nodes
-        report = MaintenanceReport([], [], [])
+        report = MaintenanceReport([], [], [], device=self.device)
         dedup = self.mode != "multiset"
         frontier = np.unique(frontier0).astype(np.int64)
         always = frontier.copy()  # (j, s) enqueued for every j (line 7-8)
         for j in range(1, self.k + 1):
+            t0 = time.perf_counter()
             if frontier.size == 0:
                 report.nodes_checked.append(0)
                 report.nodes_changed.append(0)
                 report.partitions_touched.append(0)
+                report.level_seconds.append(0.0)
                 continue
             if frontier.size > self.rebuild_threshold * n:
                 # §4.2 heuristic: most nodes queued -> full rebuild is cheaper
                 self.backend.build(self.k, self.mode)
                 report.rebuilt = True
-                return report
-            hi, lo = self.backend.frontier_signatures(j, frontier,
-                                                      dedup=dedup)
-            # one bulk resolve of the whole frontier against S_j
-            pj = self.backend.resolve(j, fuse_key(hi, lo))
+                return self._pad_report(report)
+            pj = (self.backend.propagate_level_device(
+                      j, frontier, dedup=dedup) if self.device else None)
+            if pj is None:
+                hi, lo = self.backend.frontier_signatures(j, frontier,
+                                                          dedup=dedup)
+                # one bulk resolve of the whole frontier against S_j
+                pj = self.backend.resolve(j, fuse_key(hi, lo))
             old = self.backend.pid_at(j, frontier)
             changed_mask = old != pj
             self.backend.set_pid_at(j, frontier, pj)
@@ -503,6 +694,7 @@ class BisimMaintainer:
                                       always)
             else:
                 frontier = always.copy()
+            report.level_seconds.append(time.perf_counter() - t0)
         return report
 
     # ---------------------------------------------------------- change k

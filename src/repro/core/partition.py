@@ -108,6 +108,19 @@ def _bisim_step(*args, **kwargs):
     return _bisim_step_jit(*args, **kwargs)
 
 
+def bisim_step(pid0, src, dst, elabel, pid_prev, *, num_nodes: int,
+               mode: str, use_kernel: bool = False):
+    """One fused sig_j -> dense-rank iteration, shared outside the build
+    loop (maintenance Change-k runs extra iterations through the same
+    cached program).  `pid_prev` is donated on accelerators — pass a
+    buffer you no longer need; the aliased passthrough comes back first.
+
+    Returns (pid_prev_alias, pid_new, count, hi, lo) device arrays.
+    """
+    return _bisim_step(pid0, src, dst, elabel, pid_prev,
+                       num_nodes=num_nodes, mode=mode, use_kernel=use_kernel)
+
+
 def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
                 early_stop: bool = True, with_store: bool = False,
                 use_kernel: bool = False, sync_every: int = 2) -> BisimResult:

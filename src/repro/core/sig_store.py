@@ -49,6 +49,18 @@ def label_key(labels) -> np.ndarray:
     return np.asarray(labels).astype(np.uint32, copy=False).astype(_U64)
 
 
+def split_key(keys) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of `fuse_key`: u64 keys back to (hi, lo) u32 lanes.
+
+    The device mirror (`core.device_maint.DeviceSigStore`) stores the two
+    lanes as parallel u32 columns — TPU vector units are 32-bit, and JAX
+    runs without x64 — so the sorted u64 column round-trips through this
+    split (lexicographic (hi, lo) order == u64 order).
+    """
+    keys = np.asarray(keys, dtype=_U64)
+    return (keys >> _SHIFT).astype(np.uint32), keys.astype(np.uint32)
+
+
 class SigStore:
     """Sorted (key u64, pid int64) columns; all ops are bulk array ops."""
 

@@ -98,6 +98,103 @@ def dense_rank_ints(x: jax.Array):
     return pid, new.sum().astype(jnp.int32)
 
 
+def segment_wrapsum(vals: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Per-segment wrap-add (mod 2^32) of contiguous segments.
+
+    ``bounds`` [S+1] are the segment boundaries into `vals` (segment s is
+    vals[bounds[s]:bounds[s+1]]).  Contiguity turns the segmented sum
+    into one cumulative sum plus two boundary gathers — no scatter, which
+    XLA CPU executes row by row.  Wrap subtraction of the running u32
+    sums gives exactly the segment's wrap-add total, so this is
+    bit-identical to `jax.ops.segment_sum` on u32 lanes.
+    """
+    cs = jnp.cumsum(vals, dtype=vals.dtype)
+    starts = bounds[:-1]
+    ends = bounds[1:]
+    upper = cs[jnp.maximum(ends - 1, 0)]
+    lower = jnp.where(starts > 0, cs[jnp.maximum(starts - 1, 0)],
+                      jnp.zeros((), vals.dtype))
+    return jnp.where(ends > starts, upper - lower,
+                     jnp.zeros((), vals.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("num_sigs",))
+def frontier_signature_hashes_presorted(pid0: jax.Array, elabel: jax.Array,
+                                        pid_tgt: jax.Array,
+                                        bounds: jax.Array, count, *,
+                                        num_sigs: int):
+    """Segless frontier fold: hash + contiguous segment wrap-sum + final
+    mix, for edge batches already grouped by frontier position (`bounds`)
+    and — when set semantics apply — already deduplicated.  This is the
+    common device program of the maintenance fold: the plain multiset
+    path and the host-sorted dedup path both land here (see
+    `device_maint.frontier_fold`).  Entries past `count` are padding.
+    """
+    valid = jnp.arange(elabel.shape[0], dtype=jnp.int32) < count
+    zero = jnp.uint32(0)
+    e_hi, e_lo = hash_pair(elabel, pid_tgt)
+    e_hi = jnp.where(valid, e_hi, zero)
+    e_lo = jnp.where(valid, e_lo, zero)
+    return hash_triple(segment_wrapsum(e_hi, bounds),
+                       segment_wrapsum(e_lo, bounds), pid0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_sigs", "dedup", "use_kernel"))
+def frontier_signature_hashes(pid0: jax.Array, seg: jax.Array,
+                              elabel: jax.Array, pid_tgt: jax.Array,
+                              bounds: jax.Array, count, *, num_sigs: int,
+                              dedup: bool = True, use_kernel: bool = False):
+    """Device analogue of `hashes_np.signatures_from_edges` (maintenance §4).
+
+    The maintenance frontier gather hands over flat (seg, eLabel,
+    pId_{j-1}(tgt)) columns — seg[i] is the frontier position edge i
+    belongs to, and seg must be *ascending* (frontiers are sorted and the
+    gathers emit edges in frontier order) with `bounds` [num_sigs+1] its
+    segment boundaries — padded to a fixed shape (entries past `count`;
+    padded seg entries must be >= num_sigs so they sort last and fall out
+    of the segment sum).  Bit-identical to the numpy path: same dedup
+    rule (one survivor per (seg, eLabel, pId) triple), same wrap-add
+    combine, same mix-hash lanes — asserted by tests.
+
+    pid0    u32 [num_sigs]  pId_0 of each frontier node
+    Returns (hi, lo) u32 [num_sigs]; slots past the true frontier length
+    hold garbage the caller trims.
+    """
+    if dedup:
+        # the numpy path's np.lexsort((tgt, lab, seg)): primary seg, then
+        # label, then pid — equal triples land contiguous either way, so
+        # signed-vs-unsigned comparison differences cannot change the
+        # mask.  seg's multiset is unchanged by the sort, so `bounds`
+        # still delimits the segments afterwards.
+        order = jnp.lexsort((pid_tgt, elabel, seg))
+        sseg = seg[order]
+        slab = elabel[order]
+        stgt = pid_tgt[order]
+        sval = order < count  # padding sits past `count` in probe order
+        keep = jnp.concatenate([
+            jnp.ones((1,), bool),
+            (sseg[1:] != sseg[:-1]) | (slab[1:] != slab[:-1])
+            | (stgt[1:] != stgt[:-1]),
+        ]) & sval
+        zero = jnp.uint32(0)
+        e_hi, e_lo = hash_pair(slab, stgt)
+        e_hi = jnp.where(keep, e_hi, zero)
+        e_lo = jnp.where(keep, e_lo, zero)
+        return hash_triple(segment_wrapsum(e_hi, bounds),
+                           segment_wrapsum(e_lo, bounds), pid0)
+    if use_kernel:
+        # multiset mode on TPU: the whole fold is the Pallas sig_fold's
+        # masked hash + segmented sum (one single-block call)
+        from repro.kernels import sig_fold as kernel_fold
+        valid = jnp.arange(elabel.shape[0], dtype=jnp.int32) < count
+        seg_hi, seg_lo = kernel_fold.frontier_sig_fold(
+            elabel, pid_tgt, seg, valid, num_sigs=num_sigs)
+        return hash_triple(seg_hi, seg_lo, pid0)
+    return frontier_signature_hashes_presorted(
+        pid0, elabel, pid_tgt, bounds, count, num_sigs=num_sigs)
+
+
 @functools.partial(jax.jit, static_argnames=("num_nodes", "mode", "use_kernel"))
 def signature_hashes(pid0: jax.Array, src: jax.Array, dst: jax.Array,
                      elabel: jax.Array, pid_prev: jax.Array, *,

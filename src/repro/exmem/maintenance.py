@@ -18,6 +18,13 @@ The access discipline honors the paper's I/O bounds per update batch:
     in windowed sequential reads — zero random pid accesses — before the
     same dedup + segment wrap-sum hash the in-memory engine uses
     (bit-identical signatures, so both backends agree up to renaming);
+    with `enable_device()` the gathered batch is folded on the
+    accelerator instead (`core.device_maint.frontier_fold`) — the scan,
+    join and IOStats charges are byte-identical, only the hash +
+    segment-sum moves off-host; the store resolve stays on the spillable
+    host store (S must be allowed to outgrow RAM here), so device and
+    host propagation produce bit-identical pid files and exactly equal
+    counters;
   * `parents_of` is one sequential E_tts scan;
   * pid reads/writes for a (sorted) frontier are windowed sequential
     passes over the level's file.
@@ -91,6 +98,12 @@ class OocBackend(MaintenanceBackend):
         self._pid_mms: dict = {}
         self._build_dir: Optional[str] = None
         self._build_seq = 0
+        self._device = False
+
+    # ----------------------------------------------------- device capability
+    def enable_device(self) -> bool:
+        self._device = True
+        return True
 
     # ------------------------------------------------------------ geometry
     @property
@@ -241,9 +254,12 @@ class OocBackend(MaintenanceBackend):
         return (np.concatenate(sel) if sel
                 else np.empty(0, TST_DTYPE))
 
-    def frontier_signatures(self, j: int, frontier: np.ndarray, *,
-                            dedup: bool = True):
-        frontier = np.asarray(frontier, dtype=np.int64)
+    def _gather_frontier(self, j: int, frontier: np.ndarray):
+        """Shared host/device gather: stream-select the frontier's
+        out-edges, merge-join pId_{j-1}(tgt) against the pid file, and
+        hand back flat (pid0, seg, elabel, pid_tgt) fold inputs.  Both
+        folds charge identical IOStats — the device path changes where
+        the hash runs, never what the disk does."""
         edges = self._frontier_out_edges(frontier)
         # pId_{j-1}(tgt): sort the selection by target, merge-join it
         # against the pid file's windowed sequential stream, scatter back
@@ -252,14 +268,29 @@ class OocBackend(MaintenanceBackend):
         pid_tgt = np.empty(edges.shape[0], np.int64)
         pid_tgt[order] = self._gather_sorted(
             self._pid(j - 1), edges["dst"][order].astype(np.int64))
-        # the (src, elabel, pid) re-sort + dedup + segment wrap-sum inside
-        # signatures_from_edges is the in-memory engine's — bit-identical
         seg = np.searchsorted(frontier, edges["src"].astype(np.int64))
         p0 = self._gather_sorted(self._pid(0), frontier)
         self.io.count_sort(edges.shape[0], edges.nbytes)
+        return p0, seg, edges["elabel"], pid_tgt
+
+    def frontier_signatures(self, j: int, frontier: np.ndarray, *,
+                            dedup: bool = True):
+        frontier = np.asarray(frontier, dtype=np.int64)
+        p0, seg, lab, pid_tgt = self._gather_frontier(j, frontier)
+        # the (src, elabel, pid) re-sort + dedup + segment wrap-sum inside
+        # signatures_from_edges is the in-memory engine's — bit-identical
         return hashes_np.signatures_from_edges(
-            p0, seg, edges["elabel"], pid_tgt, frontier.shape[0],
-            dedup=dedup)
+            p0, seg, lab, pid_tgt, frontier.shape[0], dedup=dedup)
+
+    def frontier_signatures_device(self, j: int, frontier: np.ndarray, *,
+                                   dedup: bool = True):
+        if not self._device:
+            return None
+        from repro.core.device_maint import frontier_fold
+        frontier = np.asarray(frontier, dtype=np.int64)
+        p0, seg, lab, pid_tgt = self._gather_frontier(j, frontier)
+        return frontier_fold(p0, seg, lab, pid_tgt, frontier.shape[0],
+                             dedup=dedup)
 
     def parents_of(self, nodes: np.ndarray) -> np.ndarray:
         nodes = np.asarray(nodes, dtype=np.int64)

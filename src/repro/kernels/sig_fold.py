@@ -101,3 +101,22 @@ def sig_fold(elabel, pid_tgt, local_src, valid, *, nodes_per_block: int,
         interpret=interpret,
     )(elabel, pid_tgt, local_src, valid)
     return hi, lo
+
+
+@functools.partial(jax.jit, static_argnames=("num_sigs", "interpret"))
+def frontier_sig_fold(elabel, pid_tgt, seg, valid, *, num_sigs: int,
+                      interpret: bool = True):
+    """Maintenance frontier fold: one single-block `sig_fold` call.
+
+    A gathered frontier batch is already a blocked-CSR block of its own —
+    `seg` plays local_src (padded entries carry seg >= num_sigs, matching
+    no node row), the batch length is the edge budget, and the whole fold
+    is one grid step.  Used by `core.signatures.frontier_signature_hashes`
+    for the multiset (no-dedup) mode when kernels are requested.
+
+    elabel/pid_tgt/seg: int-typed [E]; valid bool [E].
+    Returns (seg_hi, seg_lo) u32 [num_sigs].
+    """
+    return sig_fold(elabel, pid_tgt, seg.astype(jnp.int32), valid,
+                    nodes_per_block=num_sigs,
+                    edges_per_block=elabel.shape[0], interpret=interpret)

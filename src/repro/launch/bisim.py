@@ -81,6 +81,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-prefetch", action="store_true",
                     help="oocore: disable the async I/O pipeline "
                          "(same as --io-threads 0)")
+    ap.add_argument("--device-maintenance", action="store_true",
+                    help="maintenance subcommands: run the frontier "
+                         "signature fold (and, in-memory, the store "
+                         "resolve) on device — bit-identical to the host "
+                         "path, reported per level")
     ap.add_argument("--no-early-stop", action="store_true")
     ap.add_argument("--out", default=None,
                     help="save pid history as .npz: one stacked 'pids' "
@@ -131,11 +136,13 @@ def _report_overlap(aio_stats, compute_s: float) -> None:
 def _report_update(rep, dt: float, m) -> None:
     import numpy as np
     if rep is not None:
-        for j, (chk, chg, part) in enumerate(zip(
+        path = "device" if rep.device else "host"
+        for j, (chk, chg, part, sec) in enumerate(zip(
                 rep.nodes_checked, rep.nodes_changed,
-                rep.partitions_touched), start=1):
+                rep.partitions_touched, rep.level_seconds), start=1):
             print(f"  level {j:2d}: checked={chk} changed={chg} "
-                  f"partitions_touched={part}")
+                  f"partitions_touched={part} "
+                  f"{path}_ms={sec * 1e3:.2f}")
         if rep.rebuilt:
             print("  rebuilt (rebuild_threshold heuristic fired)")
     print(f"update: {dt * 1e3:.1f} ms; "
@@ -158,13 +165,16 @@ def run_maintenance(args, g: Graph) -> None:
             g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
             spill_threshold=args.spill_threshold, workdir=args.workdir,
             io_threads=_io_threads(args), prefetch_depth=args.prefetch_depth)
-        m = BisimMaintainer(backend, args.k, mode=args.mode)
+        m = BisimMaintainer(backend, args.k, mode=args.mode,
+                            device=args.device_maintenance)
     else:
         backend = None
-        m = BisimMaintainer(g, args.k, mode=args.mode)
+        m = BisimMaintainer(g, args.k, mode=args.mode,
+                            device=args.device_maintenance)
     engine = "oocore" if args.oocore else "in-memory"
-    print(f"initial build ({engine}, k={args.k}, mode={args.mode}): "
-          f"{time.perf_counter() - t0:.2f}s")
+    prop = "device" if m.device else "host"
+    print(f"initial build ({engine}, k={args.k}, mode={args.mode}, "
+          f"propagation={prop}): {time.perf_counter() - t0:.2f}s")
     io0 = backend.io.to_dict() if backend is not None else None
 
     rng = np.random.default_rng(args.seed)

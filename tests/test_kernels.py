@@ -86,6 +86,30 @@ def test_flash_attention_block_shape_sweep():
         assert float(jnp.abs(o - outs[0]).max()) < 1e-5
 
 
+def test_frontier_sig_fold_matches_numpy():
+    """Single-block maintenance fold (interpret) == the numpy frontier
+    path's masked hash + segment wrap-sum (multiset mode, no dedup)."""
+    from repro.core import hashes_np
+    from repro.kernels.sig_fold import frontier_sig_fold
+    rng = np.random.default_rng(4)
+    ns, ne = 16, 64
+    seg = np.sort(rng.integers(0, ns, ne)).astype(np.int32)
+    lab = rng.integers(0, 4, ne).astype(np.int32)
+    tgt = rng.integers(0, 30, ne).astype(np.int32)
+    valid = rng.random(ne) < 0.8
+    hi, lo = frontier_sig_fold(
+        jnp.asarray(lab), jnp.asarray(tgt), jnp.asarray(seg),
+        jnp.asarray(valid), num_sigs=ns)
+    e_hi, e_lo = hashes_np.hash_pair(lab[valid], tgt[valid])
+    want_hi = np.zeros(ns, np.uint32)
+    want_lo = np.zeros(ns, np.uint32)
+    with np.errstate(over="ignore"):
+        np.add.at(want_hi, seg[valid], e_hi)
+        np.add.at(want_lo, seg[valid], e_lo)
+    np.testing.assert_array_equal(np.asarray(hi), want_hi)
+    np.testing.assert_array_equal(np.asarray(lo), want_lo)
+
+
 def test_edge_hash_matches_core():
     e = jnp.arange(100, dtype=jnp.int32) % 5
     p = (jnp.arange(100, dtype=jnp.int32) * 7) % 23

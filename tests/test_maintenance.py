@@ -139,6 +139,51 @@ def test_delete_node_validates_id():
     _check(m)
 
 
+def test_rebuild_report_padded_to_k():
+    """Regression: when the §4.2 rebuild heuristic fires mid-loop, the
+    per-level report lists must still have exactly k entries (zeros for
+    the levels never reached) so consumers can index by level."""
+    g = gen.complete_graph(12)
+    m = BisimMaintainer(g, 4, rebuild_threshold=0.5)
+    n = g.num_nodes
+    rep = m.add_edges(list(range(n)), [1] * n,
+                      [(i + 1) % n for i in range(n)])
+    assert rep.rebuilt
+    assert len(rep.nodes_checked) == m.k
+    assert len(rep.nodes_changed) == m.k
+    assert len(rep.partitions_touched) == m.k
+    assert len(rep.level_seconds) == m.k
+    _check(m)
+
+
+def test_report_levels_always_k():
+    """Non-rebuild updates report exactly k levels too (incl. timing)."""
+    m = BisimMaintainer(gen.random_graph(30, 80, 3, 2, seed=1), 3)
+    rep = m.add_edge(0, 0, 1)
+    assert not rep.rebuilt and not rep.device
+    assert (len(rep.nodes_checked) == len(rep.level_seconds) == m.k)
+
+
+def test_compact_then_full_update_stream():
+    """compact() must leave both id space and stores usable by every
+    later update kind (the remapped CSR and the untouched stores have to
+    keep agreeing)."""
+    m = BisimMaintainer(gen.random_graph(30, 90, 3, 2, seed=17), 3)
+    for nid in (2, 11, 23):
+        m.delete_node(nid)
+    m.compact()
+    _check(m)
+    m.add_edges([0, 3], [1, 0], [9, 4])
+    m.delete_edges(m.graph.src[:2], m.graph.elabel[:2], m.graph.dst[:2])
+    m.add_nodes([2, 2])
+    m.delete_node(5)
+    _check(m)
+    m.compact()  # a second compact on the already-remapped space
+    m.add_edge(0, 0, 1)
+    m.change_k(4)
+    _check(m)
+
+
 def test_rebuild_heuristic_triggers():
     """Dworst: adding a y edge to a complete graph floods the frontier ->
     the §4.2 switch-back heuristic must fire."""

@@ -97,6 +97,61 @@ def test_ooc_rejected_insert_keeps_state(tmp_path):
         assert same_partition(m.pids[j], ref.pids[j]), j
 
 
+def test_ooc_change_k_around_spill_boundaries(tmp_path):
+    """§4 Change-k on the disk backend with a tiny spill threshold: the
+    kept stores have spilled runs on both sides of every change, truncate
+    must drop the dead levels' runs, and maintenance keeps resolving
+    against the surviving spilled state after each change."""
+    g = gen.random_graph(60, 220, 3, 2, seed=21)
+    backend = OocBackend(g, chunk_edges=48, chunk_nodes=32,
+                         spill_threshold=8, workdir=str(tmp_path))
+    m = BisimMaintainer(backend, 3)
+    assert any(s.num_spilled_runs > 0 for s in backend.stores)
+    rng = np.random.default_rng(3)
+    for new_k in (5, 2, 4, 1):  # increase and decrease, repeatedly
+        m.change_k(new_k)
+        assert len(backend.pid_paths) == new_k + 1
+        assert len(backend.stores) == new_k + 1
+        ref = build_bisim(m.graph, new_k, early_stop=False)
+        for j in range(new_k + 1):
+            assert same_partition(m.pids[j], ref.pids[j]), (new_k, j)
+        # an update at the new k still resolves through the spilled stores
+        n = backend.num_nodes
+        m.add_edge(int(rng.integers(0, n)), 1, int(rng.integers(0, n)))
+        ref = build_bisim(m.graph, new_k, early_stop=False)
+        for j in range(new_k + 1):
+            assert same_partition(m.pids[j], ref.pids[j]), (new_k, j)
+    backend.close()
+
+
+def test_ooc_compact_then_updates(tmp_path):
+    """compact() on the disk backend followed by every update kind: the
+    rewritten tables and pid files stay consistent with the kept stores."""
+    backend = OocBackend(gen.random_graph(50, 160, 3, 2, seed=22),
+                         chunk_edges=48, chunk_nodes=32,
+                         spill_threshold=16, workdir=str(tmp_path))
+    m = BisimMaintainer(backend, 3)
+    for nid in (3, 9, 27):
+        m.delete_node(nid)
+    m.compact()
+    assert backend.num_nodes == 47
+    ref = build_bisim(m.graph, 3, early_stop=False)
+    for j in range(4):
+        assert same_partition(m.pids[j], ref.pids[j]), j
+    m.add_edges([0, 5], [1, 0], [10, 2])
+    g = m.graph
+    m.delete_edges(g.src[:2], g.elabel[:2], g.dst[:2])
+    m.add_nodes([1, 2])
+    m.delete_node(7)
+    m.compact()
+    m.change_k(2)
+    m.add_edge(1, 0, 4)
+    ref = build_bisim(m.graph, 2, early_stop=False)
+    for j in range(3):
+        assert same_partition(m.pids[j], ref.pids[j]), j
+    backend.close()
+
+
 def test_ooc_change_k(tmp_path):
     g = gen.random_graph(40, 150, 3, 2, seed=7)
     backend = OocBackend(g, chunk_edges=32, workdir=str(tmp_path))

@@ -1,0 +1,274 @@
+"""Differential update-stream fuzz harness (ISSUE 5).
+
+Seeded random streams of insert_edges / delete_edges / delete_node /
+compact / change_k are applied through `BisimMaintainer` and checked
+after *every* step:
+
+  * against a from-scratch `build_bisim` oracle partition (up to pid
+    renaming) — for `InMemoryBackend` and `OocBackend`;
+  * for device-vs-host propagation bit-parity — identical pid histories
+    (exact ints, not renaming), identical next_pid sequences, and (disk
+    backend) exactly equal IOStats.
+
+Always-on coverage is fixed-seed via plain parametrization; when
+hypothesis is installed (`hypo_compat`) extra random seeds run on top.
+``UPDATE_FUZZ_STEPS`` bounds the stream length (the CI short-budget
+knob).
+"""
+import os
+
+import numpy as np
+import pytest
+from hypo_compat import given, strategies as st
+
+from repro.core import (BisimMaintainer, DeviceSigStore, SigStore,
+                        build_bisim, frontier_fold, hashes_np,
+                        same_partition)
+from repro.exmem import OocBackend
+from repro.graph import generators as gen
+
+STEPS = int(os.environ.get("UPDATE_FUZZ_STEPS", "5"))
+MODES = ["sorted", "dedup_hash", "multiset"]
+GENERATORS = {
+    "random": lambda: gen.random_graph(40, 110, 3, 2, seed=2),
+    "powerlaw": lambda: gen.powerlaw_graph(36, 100, 2, 2, seed=3),
+    "structured": lambda: gen.structured_graph(10, seed=5),
+}
+OPS = ["insert_edges", "delete_edges", "delete_node", "compact", "change_k"]
+
+
+def _apply_op(m: BisimMaintainer, op: str, rng) -> None:
+    """One update drawn from `rng` — the draws depend only on the rng
+    state and the maintained graph, so two maintainers fed the same seed
+    and stream stay in lockstep."""
+    n = m.backend.num_nodes
+    if op == "insert_edges":
+        cnt = int(rng.integers(1, 5))
+        m.add_edges(rng.integers(0, n, cnt), rng.integers(0, 3, cnt),
+                    rng.integers(0, n, cnt))
+    elif op == "delete_edges":
+        g = m.graph
+        if g.num_edges:
+            take = rng.integers(0, g.num_edges, min(3, g.num_edges))
+            m.delete_edges(g.src[take], g.elabel[take], g.dst[take])
+    elif op == "delete_node":
+        m.delete_node(int(rng.integers(0, n)))
+    elif op == "compact":
+        m.compact()
+    else:  # change_k (both directions around the starting k)
+        m.change_k(int(rng.integers(1, 5)))
+
+
+def _oracle_check(m: BisimMaintainer, ctx) -> None:
+    ref = build_bisim(m.graph, m.k, mode=m.mode, early_stop=False)
+    for j in range(m.k + 1):
+        assert same_partition(m.pids[j], ref.pids[j]), (*ctx, j)
+
+
+def _run_stream(make_maint, seed: int, *, steps: int = STEPS):
+    m = make_maint()
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        _apply_op(m, op, rng)
+        _oracle_check(m, (seed, step, op))
+    return m
+
+
+def _parity_stream(make_host, make_dev, seed: int, *, steps: int = STEPS,
+                   io_of=None):
+    """Drive the identical stream through a host and a device maintainer;
+    after every step the pid histories must be bit-identical (stronger
+    than partition equality — the resolves must mint the same ints)."""
+    mh, md = make_host(), make_dev()
+    assert md.device, "device propagation did not enable"
+    assert not mh.device
+    rng_h, rng_d = np.random.default_rng(seed), np.random.default_rng(seed)
+    for step in range(steps):
+        op = OPS[int(rng_h.integers(0, len(OPS)))]
+        assert op == OPS[int(rng_d.integers(0, len(OPS)))]
+        _apply_op(mh, op, rng_h)
+        _apply_op(md, op, rng_d)
+        assert mh.k == md.k
+        for j in range(mh.k + 1):
+            np.testing.assert_array_equal(
+                np.asarray(mh.pids[j]), np.asarray(md.pids[j]),
+                err_msg=f"seed={seed} step={step} op={op} level={j}")
+        assert list(mh.next_pid) == list(md.next_pid), (seed, step, op)
+        if io_of is not None:
+            assert io_of(mh) == io_of(md), (seed, step, op)
+    return mh, md
+
+
+# --------------------------------------------------- oracle differential
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", sorted(GENERATORS))
+def test_fuzz_inmemory_matches_oracle(gname, mode):
+    _run_stream(
+        lambda: BisimMaintainer(GENERATORS[gname](), 3, mode=mode),
+        seed=101)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", sorted(GENERATORS))
+def test_fuzz_ooc_matches_oracle(tmp_path, gname, mode):
+    def make():
+        backend = OocBackend(GENERATORS[gname](), chunk_edges=32,
+                             chunk_nodes=24, spill_threshold=16,
+                             workdir=str(tmp_path))
+        return BisimMaintainer(backend, 2, mode=mode)
+
+    m = _run_stream(make, seed=202)
+    m.backend.close()
+
+
+# ------------------------------------------------- device-vs-host parity
+def _make_device_maintainer(g, k, mode, store: str):
+    """Device maintainer in either store placement: 'mirror' resolves
+    through the DeviceSigStore (probe/mint/merge-insert on device),
+    'host-store' keeps S on the host SigStore (fold-only device path,
+    the OocBackend arrangement)."""
+    from repro.core import InMemoryBackend
+    backend = InMemoryBackend(g)
+    backend.enable_device(store_on_device=(store == "mirror"))
+    return BisimMaintainer(backend, k, mode=mode, device=True)
+
+
+@pytest.mark.parametrize("store", ["mirror", "host-store"])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", sorted(GENERATORS))
+def test_fuzz_device_parity_inmemory(gname, mode, store):
+    mh, md = _parity_stream(
+        lambda: BisimMaintainer(GENERATORS[gname](), 3, mode=mode),
+        lambda: _make_device_maintainer(GENERATORS[gname](), 3, mode,
+                                        store),
+        seed=303)
+    # lazy mirror-down: the extracted stores agree entry for entry
+    for j in range(mh.k + 1):
+        assert mh.stores[j].to_dict() == md.stores[j].to_dict(), j
+    _oracle_check(md, ("device", gname, mode, store))
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", sorted(GENERATORS))
+def test_fuzz_device_parity_ooc(tmp_path, gname, mode):
+    def make(device, sub):
+        backend = OocBackend(GENERATORS[gname](), chunk_edges=32,
+                             chunk_nodes=24, spill_threshold=16,
+                             workdir=str(tmp_path / sub))
+        return BisimMaintainer(backend, 2, mode=mode, device=device)
+
+    mh, md = _parity_stream(
+        lambda: make(False, "host"), lambda: make(True, "dev"), seed=404,
+        io_of=lambda m: m.backend.io.to_dict())
+    _oracle_check(md, ("ooc-device", gname, mode))
+    mh.backend.close()
+    md.backend.close()
+
+
+# ------------------------------------------------ hypothesis extra seeds
+@given(st.integers(0, 10**6))
+def test_fuzz_inmemory_random_seeds(seed):
+    _run_stream(
+        lambda: BisimMaintainer(GENERATORS["random"](), 2), seed=seed,
+        steps=min(STEPS, 4))
+
+
+@given(st.integers(0, 10**6))
+def test_fuzz_device_parity_random_seeds(seed):
+    _parity_stream(
+        lambda: BisimMaintainer(GENERATORS["powerlaw"](), 2),
+        lambda: BisimMaintainer(GENERATORS["powerlaw"](), 2, device=True),
+        seed=seed, steps=min(STEPS, 4))
+
+
+# ---------------------------------------------------- primitive parity
+@pytest.mark.parametrize("device_sort,device_segsum", [
+    (None, None),    # backend-auto placement (host sort/segsum on CPU)
+    (True, True),    # accelerator placement, exercised on CPU
+    (False, True),   # host dedup sort + device segment sum
+])
+def test_frontier_fold_bitparity_random_batches(device_sort, device_segsum):
+    """Device fold == numpy fold, bit for bit, over random gathered
+    batches (padding, empty segments, duplicate triples, both dedup
+    settings) in every stage-placement arrangement."""
+    rng = np.random.default_rng(7)
+    for dedup in (True, False):
+        for _ in range(6):
+            ns = int(rng.integers(1, 24))
+            ne = int(rng.integers(0, 90))
+            seg = np.sort(rng.integers(0, ns, ne)).astype(np.int64)
+            lab = rng.integers(0, 3, ne).astype(np.int32)  # dup triples
+            tgt = rng.integers(0, 12, ne).astype(np.int64)
+            p0 = rng.integers(0, 8, ns).astype(np.int64)
+            hh, hl = hashes_np.signatures_from_edges(p0, seg, lab, tgt, ns,
+                                                     dedup=dedup)
+            dh, dl = frontier_fold(p0, seg, lab, tgt, ns, dedup=dedup,
+                                   device_sort=device_sort,
+                                   device_segsum=device_segsum)
+            np.testing.assert_array_equal(hh, np.asarray(dh)[:ns])
+            np.testing.assert_array_equal(hl, np.asarray(dl)[:ns])
+
+
+def test_frontier_fold_cache_reuse_matches():
+    """A cache hit (same frontier, new pid_{j-1} column) returns the
+    same hashes as a cold fold, and a frontier change misses safely."""
+    rng = np.random.default_rng(9)
+    ns, ne = 12, 40
+    seg = np.sort(rng.integers(0, ns, ne)).astype(np.int64)
+    lab = rng.integers(0, 3, ne).astype(np.int64)
+    p0 = rng.integers(0, 8, ns).astype(np.int64)
+    key = np.arange(ns, dtype=np.int64) * 3  # stand-in frontier ids
+    cache = {}
+    for trial in range(3):  # trial 0 fills, 1-2 hit with fresh tgt
+        tgt = rng.integers(0, 12, ne).astype(np.int64)
+        hh, hl = hashes_np.signatures_from_edges(p0, seg, lab, tgt, ns,
+                                                 dedup=False)
+        dh, dl = frontier_fold(p0, seg, lab, tgt, ns, dedup=False,
+                               cache=cache, cache_key=key)
+        np.testing.assert_array_equal(hh, np.asarray(dh)[:ns])
+        np.testing.assert_array_equal(hl, np.asarray(dl)[:ns])
+        assert cache.get("key") is not None
+    # different frontier key -> recompute, not a stale hit
+    key2 = key + 1
+    tgt = rng.integers(0, 12, ne).astype(np.int64)
+    hh, hl = hashes_np.signatures_from_edges(p0, seg, lab, tgt, ns,
+                                             dedup=False)
+    dh, dl = frontier_fold(p0, seg, lab, tgt, ns, dedup=False,
+                           cache=cache, cache_key=key2)
+    np.testing.assert_array_equal(hh, np.asarray(dh)[:ns])
+    np.testing.assert_array_equal(hl, np.asarray(dl)[:ns])
+
+
+def test_device_store_matches_host_get_or_assign():
+    """DeviceSigStore.get_or_assign_keys is bit-identical to the host
+    SigStore — same pids (first-occurrence minting order), same next_pid,
+    same extracted contents — across growth/re-bucketing rounds."""
+    rng = np.random.default_rng(11)
+    host, dev = SigStore.empty(), DeviceSigStore(SigStore.empty())
+    nh = nd = 0
+    for _ in range(12):
+        keys = rng.integers(0, 70, rng.integers(1, 50)).astype(np.uint64)
+        # exercise the hi lane too (level-j keys have both lanes set)
+        keys |= rng.integers(0, 4, keys.shape).astype(np.uint64) << \
+            np.uint64(32)
+        oh, nh = host.get_or_assign(keys, nh)
+        od, nd = dev.get_or_assign_keys(keys, nd)
+        np.testing.assert_array_equal(oh, od)
+        assert nh == nd
+    assert dev.to_host().to_dict() == host.to_dict()
+    assert len(dev) == len(host)
+
+
+def test_device_store_mirrors_existing_store():
+    """Mirroring a populated store keeps lookups and minting aligned."""
+    rng = np.random.default_rng(13)
+    keys = np.unique(rng.integers(0, 10**9, 100).astype(np.uint64))
+    host = SigStore(keys, np.arange(keys.size, dtype=np.int64))
+    dev = DeviceSigStore(host.slice_copy())
+    probe = np.concatenate([keys[::3], keys[:5] + np.uint64(1)])
+    oh, nh = host.get_or_assign(probe, keys.size)
+    od, nd = dev.get_or_assign_keys(probe, keys.size)
+    np.testing.assert_array_equal(oh, od)
+    assert nh == nd
+    assert dev.to_host().to_dict() == host.to_dict()
