@@ -14,6 +14,9 @@ from .distributed import (ShardedGraph, build_bisim_distributed,
 from .device_maint import DeviceSigStore, frontier_fold
 from .maintenance import (BisimMaintainer, InMemoryBackend,
                           MaintenanceBackend, MaintenanceReport)
+from .faults import (FaultPlan, InjectedCrash, TransientIOError,
+                     install_fault_plan, with_retries)
+from .integrity import ChecksumError, crc32_array, verify_npy
 from .oracle import is_k_bisimilar, oracle_pids
 from .sig_store import (SigStore, SpillableSigStore, fuse_key, label_key,
                         split_key)
@@ -27,4 +30,6 @@ __all__ = [
     "MaintenanceReport", "DeviceSigStore", "frontier_fold",
     "is_k_bisimilar", "oracle_pids", "SigStore", "SpillableSigStore",
     "fuse_key", "label_key", "split_key", "hashes_np", "signatures",
+    "FaultPlan", "InjectedCrash", "TransientIOError", "install_fault_plan",
+    "with_retries", "ChecksumError", "crc32_array", "verify_npy",
 ]

@@ -67,14 +67,17 @@ The contract:
 from __future__ import annotations
 
 import abc
+import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Iterable, Optional
 
 import numpy as np
 
 from repro.graph.storage import Graph
 from . import hashes_np
+from .faults import InjectedCrash, fault_point
 from .partition import BisimResult, bisim_step, build_bisim
 from .sig_store import SigStore, fuse_key, label_key
 
@@ -256,6 +259,30 @@ class MaintenanceBackend(abc.ABC):
         """Grow to new_k levels (extra Build_Bisim iterations on top of
         the stored state, or a rebuild where that is the cheaper/only
         option — the partition is identical either way)."""
+
+    # ------------------------------------------------------------ durability
+    # Durable backends (OocBackend with wal=True) override these; the
+    # defaults describe a volatile backend with nothing to log or restore.
+    wal_supported: bool = False
+
+    def wal_append(self, op: str, arrays: dict) -> int:
+        """Append one logical update to the backend's write-ahead log;
+        returns its lsn.  Only meaningful when `wal_supported`."""
+        raise NotImplementedError("backend has no write-ahead log")
+
+    def wal_flush(self) -> None:
+        """Force every appended-but-uncommitted WAL record durable."""
+
+    def wal_replay_records(self, after_lsn: int = 0):
+        """Yield (lsn, op, arrays) for committed WAL records past
+        `after_lsn`, in lsn order.  Volatile backends yield nothing."""
+        return iter(())
+
+    def snapshot(self, state: dict) -> None:
+        """Persist the full maintained state (pid history, stores, graph
+        tables, plus the maintainer-owned `state` dict) as a durable,
+        manifest-committed artifact that a later `restore` can reopen."""
+        raise NotImplementedError("backend has no snapshot support")
 
 
 class InMemoryBackend(MaintenanceBackend):
@@ -504,13 +531,23 @@ class BisimMaintainer:
     ``device=True`` asks the backend for device-resident propagation
     (see the module docstring's contract); backends without the
     capability silently keep the host path, and `self.device` reports
-    which one is active.
+    which one is active.  A device failure mid-stream (a flaky
+    accelerator, an injected fault) degrades to the bit-identical host
+    path with a warning instead of aborting the stream — `self.device`
+    flips to False and stays there.
+
+    ``wal=True`` logs every logical update to the backend's write-ahead
+    log *before* applying it (classic redo rule), so
+    `snapshot()` + `BisimMaintainer.restore(...)` recover the maintained
+    partition after a crash: the snapshot is the redo base and committed
+    WAL records past its lsn are re-applied through these same methods.
+    Requires a backend with `wal_supported` (OocBackend(wal=True)).
     """
 
     def __init__(self, graph, k: int, *, mode: str = "sorted",
                  rebuild_threshold: float = 0.5,
                  result: Optional[BisimResult] = None,
-                 device: bool = False):
+                 device: bool = False, wal: bool = False):
         if mode not in ("sorted", "dedup_hash", "multiset"):
             raise ValueError(f"unknown signature mode: {mode}")
         self.k = k
@@ -518,11 +555,99 @@ class BisimMaintainer:
         self.rebuild_threshold = rebuild_threshold
         self.backend = (graph if isinstance(graph, MaintenanceBackend)
                         else InMemoryBackend(graph))
+        if wal and not self.backend.wal_supported:
+            raise ValueError(
+                "wal=True requires a backend with a write-ahead log "
+                "(OocBackend(wal=True)); refusing to silently drop "
+                "durability")
+        self.wal = bool(wal)
+        self._in_replay = False
+        self._wal_depth = 0
         # delete_node leaves an isolated tombstone row (dense id space);
         # compact() later drops the flagged rows and remaps ids.
         self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
         self.backend.build(k, mode, result=result)
         self.device = bool(device) and self.backend.enable_device()
+
+    # ------------------------------------------------------------ durability
+    @contextlib.contextmanager
+    def _logged(self, op: str, **arrays):
+        """Write-ahead one logical update (redo rule: the record reaches
+        the log *before* the mutation starts), then run it.  Nested ops
+        (delete_node's inner delete_edges) and replayed ops are not
+        re-logged — the WAL holds outermost logical updates only."""
+        if not self.wal or self._in_replay or self._wal_depth:
+            self._wal_depth += 1
+            try:
+                yield
+            finally:
+                self._wal_depth -= 1
+            return
+        self.backend.wal_append(op, arrays)
+        self._wal_depth += 1
+        try:
+            yield
+        finally:
+            self._wal_depth -= 1
+
+    def snapshot(self) -> None:
+        """Persist the maintained partition durably: commit the WAL, then
+        hand the backend everything the restore path needs beyond its own
+        storage (k, mode, tombstones, whether the WAL is on).  After the
+        snapshot commits, WAL records it absorbs are pruned."""
+        if self.wal:
+            self.backend.wal_flush()
+        self.backend.snapshot(dict(
+            k=int(self.k), mode=self.mode,
+            rebuild_threshold=float(self.rebuild_threshold),
+            wal=bool(self.wal),
+            tombstone=np.asarray(self._tombstone, dtype=bool)))
+
+    _REPLAY_OPS = {
+        "add_nodes": lambda m, a: m.add_nodes(a["labels"]),
+        "add_edges": lambda m, a: m.add_edges(a["src"], a["elabel"],
+                                              a["dst"]),
+        "delete_edges": lambda m, a: m.delete_edges(a["src"], a["elabel"],
+                                                    a["dst"]),
+        "delete_node": lambda m, a: m.delete_node(int(a["nid"][0])),
+        "compact": lambda m, a: m.compact(),
+        "change_k": lambda m, a: m.change_k(int(a["new_k"][0])),
+    }
+
+    @classmethod
+    def restore(cls, backend: MaintenanceBackend, state: dict, *,
+                device: bool = False) -> "BisimMaintainer":
+        """Reconstruct a maintainer from a backend's restored snapshot
+        (e.g. ``OocBackend.restore(workdir)``), then redo-replay every
+        committed WAL record past the snapshot's lsn through the normal
+        update methods.  The possibly half-mutated pre-crash live state
+        is *not* consulted — recovery is snapshot + committed redo, so a
+        crash mid-update can never leave a partially applied batch."""
+        m = object.__new__(cls)
+        m.k = int(state["k"])
+        m.mode = state["mode"]
+        m.rebuild_threshold = float(state["rebuild_threshold"])
+        m.backend = backend
+        m.wal = bool(state.get("wal", False)) and backend.wal_supported
+        m._in_replay = False
+        m._wal_depth = 0
+        m._tombstone = np.asarray(state["tombstone"], dtype=bool)
+        m.device = bool(device) and backend.enable_device()
+        m._in_replay = True
+        try:
+            for _lsn, op, arrays in backend.wal_replay_records(
+                    after_lsn=int(state.get("wal_lsn", 0))):
+                try:
+                    cls._REPLAY_OPS[op](m, arrays)
+                except (ValueError, OverflowError):
+                    # the record reaches the log before validation (redo
+                    # rule), so an op the backend rejected is logged too;
+                    # it left no state behind then and it raises the same
+                    # way now — skip it, exactly as the caller did
+                    pass
+        finally:
+            m._in_replay = False
+        return m
 
     # ------------------------------------------------------------- queries
     @property
@@ -566,21 +691,23 @@ class BisimMaintainer:
     def add_nodes(self, labels: Iterable[int]) -> list:
         """Algorithm 3: bulk insert isolated nodes (merge-join on labels)."""
         labels = np.asarray(list(labels), dtype=np.int32)
-        base = self.backend.add_node_rows(labels)
-        new_ids = list(range(base, base + labels.shape[0]))
-        self._tombstone = np.concatenate(
-            [self._tombstone, np.zeros(labels.shape[0], dtype=bool)])
-        # level 0: one bulk resolve of the label keys (merge-join on labels)
-        p0 = self.backend.resolve(0, label_key(labels))
-        self.backend.append_pid_rows(0, p0)
-        # sig_j of an isolated node is (pId_0, {}) for every j >= 1: the
-        # empty-set combine is the identity (0, 0), so its hash only
-        # depends on p0 — one vectorized hash_triple per level.
-        zero = np.zeros(labels.shape[0], np.uint32)
-        hi, lo = hashes_np.hash_triple(zero, zero, p0)
-        keys = fuse_key(hi, lo)
-        for j in range(1, self.k + 1):
-            self.backend.append_pid_rows(j, self.backend.resolve(j, keys))
+        with self._logged("add_nodes", labels=labels):
+            base = self.backend.add_node_rows(labels)
+            new_ids = list(range(base, base + labels.shape[0]))
+            self._tombstone = np.concatenate(
+                [self._tombstone, np.zeros(labels.shape[0], dtype=bool)])
+            # level 0: one bulk resolve of the label keys (merge-join)
+            p0 = self.backend.resolve(0, label_key(labels))
+            self.backend.append_pid_rows(0, p0)
+            # sig_j of an isolated node is (pId_0, {}) for every j >= 1:
+            # the empty-set combine is the identity (0, 0), so its hash
+            # only depends on p0 — one vectorized hash_triple per level.
+            zero = np.zeros(labels.shape[0], np.uint32)
+            hi, lo = hashes_np.hash_triple(zero, zero, p0)
+            keys = fuse_key(hi, lo)
+            for j in range(1, self.k + 1):
+                self.backend.append_pid_rows(j,
+                                             self.backend.resolve(j, keys))
         return new_ids
 
     # ------------------------------------------------------- ADD_EDGE(S)
@@ -589,13 +716,14 @@ class BisimMaintainer:
         src = np.atleast_1d(np.asarray(src, dtype=np.int32))
         dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
         elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
-        # the backend range-validates before mutating, so a rejected
-        # insert must not re-animate anything
-        self.backend.add_edge_rows(src, elabel, dst)
-        # an edge incident to a tombstoned node re-animates it
-        self._tombstone[src] = False
-        self._tombstone[dst] = False
-        return self._propagate(frontier0=np.unique(src))
+        with self._logged("add_edges", src=src, elabel=elabel, dst=dst):
+            # the backend range-validates before mutating, so a rejected
+            # insert must not re-animate anything
+            self.backend.add_edge_rows(src, elabel, dst)
+            # an edge incident to a tombstoned node re-animates it
+            self._tombstone[src] = False
+            self._tombstone[dst] = False
+            return self._propagate(frontier0=np.unique(src))
 
     def add_edge(self, s: int, l: int, t: int) -> MaintenanceReport:
         return self.add_edges([s], [l], [t])
@@ -605,8 +733,9 @@ class BisimMaintainer:
         src = np.atleast_1d(np.asarray(src, dtype=np.int32))
         dst = np.atleast_1d(np.asarray(dst, dtype=np.int32))
         elabel = np.atleast_1d(np.asarray(elabel, dtype=np.int32))
-        self.backend.remove_edge_rows(src, elabel, dst)
-        return self._propagate(frontier0=np.unique(src))
+        with self._logged("delete_edges", src=src, elabel=elabel, dst=dst):
+            self.backend.remove_edge_rows(src, elabel, dst)
+            return self._propagate(frontier0=np.unique(src))
 
     def delete_node(self, nid: int) -> MaintenanceReport:
         """Remove a node: first its incident edges, then the node row."""
@@ -614,11 +743,14 @@ class BisimMaintainer:
             # reject before any mutation (negative ids would wrap around
             # and tombstone a live row)
             raise ValueError(f"node id out of range: {nid}")
-        src, elabel, dst = self.backend.incident_edges(nid)
-        rep = self.delete_edges(src, elabel, dst)
-        # The paper then drops the N_t row; we keep a tombstone (isolated
-        # node) to preserve the dense id space until compact() runs.
-        self._tombstone[nid] = True
+        with self._logged("delete_node",
+                          nid=np.asarray([nid], dtype=np.int64)):
+            src, elabel, dst = self.backend.incident_edges(nid)
+            rep = self.delete_edges(src, elabel, dst)
+            # The paper then drops the N_t row; we keep a tombstone
+            # (isolated node) to preserve the dense id space until
+            # compact() runs.
+            self._tombstone[nid] = True
         return rep
 
     def compact(self) -> np.ndarray:
@@ -635,8 +767,9 @@ class BisimMaintainer:
         remap[dead] = -1
         if not dead.any():
             return remap
-        self.backend.compact(~dead, remap)
-        self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
+        with self._logged("compact"):
+            self.backend.compact(~dead, remap)
+            self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
         return remap
 
     @property
@@ -673,8 +806,23 @@ class BisimMaintainer:
                 self.backend.build(self.k, self.mode)
                 report.rebuilt = True
                 return self._pad_report(report)
-            pj = (self.backend.propagate_level_device(
-                      j, frontier, dedup=dedup) if self.device else None)
+            pj = None
+            if self.device:
+                try:
+                    fault_point("device", f"level {j}")
+                    pj = self.backend.propagate_level_device(
+                        j, frontier, dedup=dedup)
+                except InjectedCrash:
+                    raise  # a simulated process death is not degradable
+                except Exception as exc:
+                    # graceful degradation: the host path computes the
+                    # bit-identical partition, so a flaky device demotes
+                    # the stream instead of killing it; the flip is
+                    # permanent for this maintainer (no retry storms)
+                    warnings.warn(
+                        f"device propagation failed ({exc!r}); degrading "
+                        "to the bit-identical host path", RuntimeWarning)
+                    self.device = False
             if pj is None:
                 hi, lo = self.backend.frontier_signatures(j, frontier,
                                                           dedup=dedup)
@@ -701,8 +849,10 @@ class BisimMaintainer:
     def change_k(self, new_k: int) -> None:
         """§4 'Change k': decrease slices history; increase runs extra
         iterations of Algorithm 1 on top of the stored state."""
-        if new_k <= self.k:
-            self.backend.truncate_k(new_k)
-        else:
-            self.backend.extend_k(new_k, self.mode)
-        self.k = new_k
+        with self._logged("change_k",
+                          new_k=np.asarray([new_k], dtype=np.int64)):
+            if new_k <= self.k:
+                self.backend.truncate_k(new_k)
+            else:
+                self.backend.extend_k(new_k, self.mode)
+            self.k = new_k

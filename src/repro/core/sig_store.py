@@ -31,6 +31,7 @@ import os
 
 import numpy as np
 
+from .integrity import ChecksumError, crc32_array, crc32_update
 from .kway import merge_sorted_sources
 
 _U64 = np.uint64
@@ -205,7 +206,7 @@ class SpillableSigStore(SigStore):
 
     __slots__ = ("spill_threshold", "max_runs", "spill_dir", "io", "aio",
                  "mmap_cache", "_runs", "_run_seq", "_owns_dir", "_mmaps",
-                 "_pending")
+                 "_pending", "_sums", "_verified")
 
     def __init__(self, spill_threshold: int = 1 << 20, *,
                  spill_dir: "str | None" = None, max_runs: int = 8,
@@ -245,6 +246,8 @@ class SpillableSigStore(SigStore):
         from collections import OrderedDict
         self._mmaps = OrderedDict()  # path -> memmap, LRU-bounded
         self._pending = {}   # path -> in-flight async spill write
+        self._sums = {}      # path -> crc32 of run data, recorded at spill
+        self._verified = set()  # paths whose checksum has been checked
 
     # ------------------------------------------------------------- queries
     def __len__(self) -> int:
@@ -269,7 +272,20 @@ class SpillableSigStore(SigStore):
             self._mmaps.move_to_end(path)
             return mm
         self._wait_pending(path)
-        mm = self._mmaps[path] = np.load(path, mmap_mode="r")
+        try:
+            mm = np.load(path, mmap_mode="r")
+        except (OSError, ValueError, EOFError) as exc:
+            raise ChecksumError(
+                f"unreadable spill run {path!r}: {exc}") from exc
+        # first open of a run verifies its recorded checksum (one full
+        # read); later cache misses re-open without re-verifying
+        if path not in self._verified:
+            expect = self._sums.get(path)
+            if expect is not None and crc32_array(np.asarray(mm)) != expect:
+                raise ChecksumError(
+                    f"checksum mismatch in spill run {path!r}")
+            self._verified.add(path)
+        self._mmaps[path] = mm
         while len(self._mmaps) > self.mmap_cache:
             self._mmaps.popitem(last=False)
         return mm
@@ -314,6 +330,12 @@ class SpillableSigStore(SigStore):
             return
         kp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.keys.npy")
         pp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.pids.npy")
+        # checksums from the arrays still in hand, before the save
+        self._sums[kp] = crc32_array(self.keys)
+        self._sums[pp] = crc32_array(self.pids)
+        # just written from these very bytes: verification is for runs
+        # adopted from a snapshot, not ones this process produced
+        self._verified.update((kp, pp))
         if self.aio is not None and getattr(self.aio, "enabled", False):
             # the resident arrays are replaced (never mutated) below, so
             # the background save owns them; probes against this run wait
@@ -364,20 +386,27 @@ class SpillableSigStore(SigStore):
         mk = open_memmap(out_kp, mode="w+", dtype=_U64, shape=(total,))
         mp = open_memmap(out_pp, mode="w+", dtype=np.int64, shape=(total,))
         pos = 0
+        crc_k = crc_p = 0
         for ck, cp in merge_sorted_sources(srcs, num_key_cols=1,
                                            budget_rows=budget_rows):
             mk[pos:pos + ck.shape[0]] = ck
             mp[pos:pos + cp.shape[0]] = cp
+            crc_k = crc32_update(crc_k, ck)
+            crc_p = crc32_update(crc_p, cp)
             pos += ck.shape[0]
         mk.flush()
         mp.flush()
         del mk, mp, srcs
+        self._sums[out_kp], self._sums[out_pp] = crc_k, crc_p
+        self._verified.update((out_kp, out_pp))
         if self.io is not None:
             self.io.bump("merge_passes")
             self.io.count_sort(total, total * 16)
         for kp, pp, _ in victims:
             for p in (kp, pp):
                 self._mmaps.pop(p, None)
+                self._sums.pop(p, None)
+                self._verified.discard(p)
                 os.remove(p)
         self._runs = survivors + [(out_kp, out_pp, total)]
 
@@ -402,6 +431,47 @@ class SpillableSigStore(SigStore):
         keys, pids = self.merged_arrays()
         return {int(k): int(p) for k, p in zip(keys.tolist(), pids.tolist())}
 
+    # --------------------------------------------------------- durability
+    def flush(self) -> None:
+        """Force the whole store onto disk: spill the resident run (if
+        any) and wait out in-flight async writes, so `state()` describes
+        files that actually exist with final bytes.  Used by snapshots."""
+        self._spill()
+        for path in list(self._pending):
+            self._wait_pending(path)
+
+    def state(self) -> dict:
+        """Portable description of the on-disk runs (paths relative to
+        ``spill_dir``) with their lengths and checksums — everything a
+        restore needs to re-adopt the runs from a snapshot copy.  Call
+        `flush()` first; a non-empty resident run is an error here."""
+        if self.keys.shape[0]:
+            raise RuntimeError("state() requires flush() first: resident "
+                               "run not spilled")
+        rel = os.path.relpath
+        return {
+            "run_seq": self._run_seq,
+            "runs": [[rel(kp, self.spill_dir), rel(pp, self.spill_dir), ln]
+                     for kp, pp, ln in self._runs],
+            "sums": {rel(p, self.spill_dir): c
+                     for p, c in self._sums.items()},
+        }
+
+    def adopt_state(self, state: dict) -> None:
+        """Bind this (empty) store to run files already present in
+        ``spill_dir`` as described by a prior `state()`.  Checksums are
+        re-verified lazily on each run's first mmap, so a corrupted
+        snapshot run raises `ChecksumError` at first probe."""
+        if len(self):
+            raise RuntimeError("adopt_state() requires an empty store")
+        join = os.path.join
+        self._run_seq = int(state["run_seq"])
+        self._runs = [(join(self.spill_dir, kp), join(self.spill_dir, pp),
+                       int(ln)) for kp, pp, ln in state["runs"]]
+        self._sums = {join(self.spill_dir, p): int(c)
+                      for p, c in state["sums"].items()}
+        self._verified = set()
+
     def close(self) -> None:
         """Delete the spill runs (and the spill dir if we created it)."""
         for path in list(self._pending):
@@ -417,6 +487,8 @@ class SpillableSigStore(SigStore):
                 if os.path.exists(p):
                     os.remove(p)
         self._runs = []
+        self._sums = {}
+        self._verified = set()
         if self._owns_dir:
             import shutil
             shutil.rmtree(self.spill_dir, ignore_errors=True)

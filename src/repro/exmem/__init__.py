@@ -71,10 +71,62 @@ that regime; each module maps onto a paper construct:
 
 Partitions are identical (up to pid renaming) to the in-memory
 `repro.core` engines in every signature mode.
+
+Durability & recovery
+---------------------
+Out-of-core state lives on disk, so a crash mid-write is a first-class
+input, not an exception path.  The subsystem's guarantees:
+
+  Checksummed artifacts.  Every persistent `.npy` the engine writes
+    (table chunks, pid files, spill runs, WAL records) gets a CRC-32
+    over its array data bytes, computed from the in-memory buffer at
+    write time — zero extra read I/O.  Checksums live in a versioned
+    ``manifest.json`` (`durability.Manifest`) written *last* and
+    atomically, so the manifest is the commit point of the whole
+    artifact: a torn or bit-flipped file fails `OocGraph.load` /
+    snapshot restore with `repro.core.integrity.ChecksumError` instead
+    of silently yielding a wrong partition.  Spill runs adopted from a
+    snapshot verify lazily on first mmap; runs this process just wrote
+    are exempt (we hold the bytes they came from).
+
+  Write-ahead maintenance log.  ``OocBackend(wal=True)`` +
+    ``BisimMaintainer(..., wal=True)`` append every mutation (op name +
+    argument arrays, `durability.WriteAheadLog`) *before* applying it.
+    Records are fsync'd and group-committed (``wal_group`` batches per
+    fsync; at most ``group-1`` acknowledged updates can be lost).
+    Recovery = `OocBackend.restore(workdir)` (re-opens the last
+    `snapshot()` after verifying every checksum) +
+    `BisimMaintainer.restore(backend, state)` (replays committed WAL
+    records with lsn past the snapshot through the normal maintenance
+    methods).  Mid-crash live tables are scratch — recovery never
+    reads them.  Cost: O(k·sort(|E_t|) + k·sort(|N_t|)) per replayed
+    batch, counted by the backend's `IOStats`.
+
+  Checkpoint/resume builds.  ``build_bisim_oocore(...,
+    checkpoint=True)`` writes a per-level ``ckpt.json`` (finished pid
+    files + CRCs, iteration stats, `IOStats`, spill-store states);
+    ``resume=True`` verifies the finished levels and restarts at the
+    first unfinished one with the I/O accounting continuing, not
+    restarting.
+
+  Fault injection.  `repro.core.faults.FaultPlan` (installed with
+    `install_fault_plan`) deterministically turns the Nth I/O
+    fault-point into a crash (`InjectedCrash`), a transient
+    (`TransientIOError`, retried with bounded backoff by
+    `with_retries`), or a torn write (file published with its tail
+    missing — caught later by the checksums).  Device-step failures
+    degrade gracefully: the maintainer warns once and falls back to
+    the bit-identical numpy path.
+
+  Non-guarantees.  fsync durability is only as real as the
+    filesystem's; uncommitted WAL tail records are dropped (by design);
+    the manifest protects artifact *files*, not the free-form workdir
+    scratch, which recovery deletes.
 """
 from .aio import (AioConfig, AioStats, BoundedSaver, Pipeline,
                   PrefetchReader, ReadaheadArray, StreamingWriter)
 from .build import OocBisimResult, build_bisim_oocore
+from .durability import Manifest, WriteAheadLog
 from .maintenance import OocBackend
 from .runs import (IOStats, external_sort, lexsort_records, make_records,
                    merge_runs, rebuffer, sort_to_runs)
@@ -85,5 +137,5 @@ __all__ = [
     "external_sort", "lexsort_records", "make_records", "merge_runs",
     "rebuffer", "sort_to_runs", "ChunkedColumn", "OocGraph",
     "AioConfig", "AioStats", "BoundedSaver", "Pipeline", "PrefetchReader",
-    "ReadaheadArray", "StreamingWriter",
+    "ReadaheadArray", "StreamingWriter", "Manifest", "WriteAheadLog",
 ]

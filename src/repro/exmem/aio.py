@@ -47,6 +47,22 @@ may now happen from a reader thread concurrently with the consumer, so
 `IOStats` guards its counters with a lock; `AioStats` (wall-clock
 overlap, not I/O cost) stays separate precisely so the cost-model
 counters stay deterministic.
+
+Durability contract (see also `exmem.durability`): a published artifact
+(``fsync=True``) is crash-durable, not merely atomic — the data blocks
+are fsync'd *and the parent directory is fsync'd after the rename*, so
+a committed file cannot vanish (or point at garbage) when the machine
+dies right after `close()`/`atomic_save` returns.  Scratch files skip
+both syncs.  Every write primitive passes through
+`repro.core.faults.fault_point`, so deterministic fault schedules can
+kill, corrupt, or flake any write; `TransientIOError` is retried with
+bounded backoff (`with_retries`) in `atomic_save` (and therefore
+`BoundedSaver`) and in `StreamingWriter`'s append path, while readers
+retry at the chunk-load level (`OocGraph._iter_table`) beneath any
+`PrefetchReader` — a generator cannot be re-driven after it raises, so
+the retry must live below it.  `StreamingWriter` keeps a running CRC-32
+of every byte it publishes (``checksum`` after `close()`), which the
+durable-artifact manifests record without re-reading the file.
 """
 from __future__ import annotations
 
@@ -55,10 +71,13 @@ import os
 import queue
 import threading
 import time
+import zlib
 from typing import Callable, Iterable, Iterator, Optional
 
 import numpy as np
 from numpy.lib.format import open_memmap
+
+from repro.core.faults import InjectedCrash, fault_point, with_retries
 
 _SENTINEL = object()
 READER_THREAD_PREFIX = "exmem-aio-reader"
@@ -66,19 +85,52 @@ WRITER_THREAD_PREFIX = "exmem-aio-writer"
 EXECUTOR_THREAD_PREFIX = "exmem-aio-pool"
 
 
+def fsync_dir(path: str) -> None:
+    """fsync a directory: makes a just-renamed entry durable.  Without
+    this a crash after `os.replace` can lose the *name* even though the
+    data blocks were fsync'd — the classic vanishing-commit bug."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _publish_torn(tmp: str, path: str) -> None:
+    """Fault-injection helper: publish a half-truncated file under the
+    live name and die — simulating a rename that reached the disk before
+    the data blocks did (what checksum verification exists to catch)."""
+    size = os.path.getsize(tmp)
+    with open(tmp, "rb+") as f:
+        f.truncate(max(size // 2, 1))
+    os.replace(tmp, path)
+    raise InjectedCrash(f"injected torn write published at {path}")
+
+
 def atomic_save(path: str, arr: np.ndarray, *, fsync: bool = False) -> None:
     """``np.save`` via a temp file + atomic rename: the file is either
     absent or complete under ``path``, never partial.  ``fsync`` is for
-    published artifacts that must survive a crash; scratch files (sort
-    runs, spill runs — rebuilt from the tables anyway) skip it, since an
-    fsync per run would serialize the whole pipeline on the disk."""
-    tmp = path + ".aio-tmp"
-    with open(tmp, "wb") as f:
-        np.save(f, arr)
+    published artifacts that must survive a crash — it syncs the data
+    *and the parent directory after the rename*, so the committed name
+    itself is durable; scratch files (sort runs, spill runs — rebuilt
+    from the tables anyway) skip both, since an fsync per run would
+    serialize the whole pipeline on the disk.  Transient injected I/O
+    errors are retried with bounded backoff."""
+    def _save():
+        verdict = fault_point("atomic_save", path)
+        tmp = path + ".aio-tmp"
+        with open(tmp, "wb") as f:
+            np.save(f, arr)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        if verdict == "torn":
+            _publish_torn(tmp, path)
+        os.replace(tmp, path)
         if fsync:
-            f.flush()
-            os.fsync(f.fileno())
-    os.replace(tmp, path)
+            fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+    with_retries(_save)
 
 
 @dataclasses.dataclass
@@ -224,10 +276,13 @@ class StreamingWriter:
     mutate the array afterwards).  With ``threaded=True`` chunks enqueue
     into a bounded queue and a worker copies them into the temp memmap —
     the double buffer.  ``close()`` drains, flushes, fsyncs (published
-    artifacts only; ``fsync=False`` for scratch files), and renames
-    ``<path>.aio-tmp`` to ``path``; until then the live name is
-    untouched.  A worker exception re-raises at the next ``write`` or at
-    ``close``; ``abort()`` discards everything.
+    artifacts only; ``fsync=False`` for scratch files) the data *and*
+    the parent directory, and renames ``<path>.aio-tmp`` to ``path``;
+    until then the live name is untouched.  A worker exception re-raises
+    at the next ``write`` or at ``close``; ``abort()`` discards
+    everything.  A running CRC-32 of every appended byte is kept
+    (``checksum``, valid after a successful ``close()``), so manifest
+    writers record the artifact's checksum without re-reading the file.
     """
 
     def __init__(self, path: str, dtype, length: int, *, depth: int = 2,
@@ -239,6 +294,7 @@ class StreamingWriter:
         self._mm = open_memmap(self._tmp, mode="w+", dtype=np.dtype(dtype),
                                shape=(int(length),))
         self._pos = 0
+        self._crc = 0
         self._stats = stats
         self._exc: Optional[BaseException] = None
         self._closed = False
@@ -254,10 +310,21 @@ class StreamingWriter:
     def rows_written(self) -> int:
         return self._pos
 
+    @property
+    def checksum(self) -> int:
+        """CRC-32 of the published data bytes (after a clean `close()`)."""
+        return self._crc
+
     def _append(self, arr: np.ndarray) -> None:
-        n = arr.shape[0]
-        self._mm[self._pos:self._pos + n] = arr
-        self._pos += n
+        def _copy():
+            fault_point("sw_write", self.path)
+            n = arr.shape[0]
+            self._mm[self._pos:self._pos + n] = arr
+            self._pos += n
+
+        with_retries(_copy)
+        self._crc = zlib.crc32(
+            np.ascontiguousarray(arr).tobytes(), self._crc) & 0xFFFFFFFF
         if self._stats is not None:
             self._stats.add_written(arr.nbytes)
 
@@ -300,7 +367,8 @@ class StreamingWriter:
             thread.join()
 
     def close(self) -> None:
-        """Drain, flush, fsync, and atomically publish the file."""
+        """Drain, flush, fsync (data + parent dir), and atomically
+        publish the file."""
         if self._closed:
             return
         self._closed = True
@@ -315,10 +383,15 @@ class StreamingWriter:
             except OSError:
                 pass
             raise self._take_exc()
+        verdict = fault_point("sw_close", self.path)
         if self._fsync:
             with open(self._tmp, "rb+") as f:
                 os.fsync(f.fileno())
+        if verdict == "torn":
+            _publish_torn(self._tmp, self.path)
         os.replace(self._tmp, self.path)
+        if self._fsync:
+            fsync_dir(os.path.dirname(os.path.abspath(self.path)))
 
     def abort(self) -> None:
         """Stop the worker and discard the temp file (never publishes)."""

@@ -28,6 +28,17 @@ paper's sort/scan discipline exactly:
 `IOStats.sort_cost`/`scan_cost` count records through these passes, so a
 k-iteration build shows the paper's `O(k·sort(|E_t|) + k·scan(|N_t|) +
 sort(|N_t|))` shape: both counters grow linearly in k.
+
+Checkpoint/resume: with ``checkpoint=True`` (requires an explicit
+``workdir``) every completed level commits a ``ckpt.json`` — build
+params, counts, per-iteration stats, cumulative `IOStats`, the CRC-32 of
+every finished pid file, and (with ``keep_stores``) each retired store's
+flushed run state.  ``resume=True`` re-opens that checkpoint: finished
+pid files are checksum-verified (charged to `IOStats` as the recovery
+scan), counters continue rather than reset, stale per-iteration scratch
+from the killed run is discarded, and the build restarts at the first
+unfinished level — so a crash at any point costs at most one level of
+redo, never the whole build.
 """
 from __future__ import annotations
 
@@ -46,17 +57,21 @@ import numpy as np
 
 from repro.core import hashes_np
 from repro.core import signatures as sig
+from repro.core.integrity import verify_npy
 from repro.core.partition import IterationStats
 from repro.core.sig_store import SpillableSigStore, fuse_key, label_key
 from repro.graph.storage import Graph
 
 from . import aio as aio_mod
 from . import runs as runs_mod
+from .durability import atomic_write_json, read_json
 from .runs import IOStats
 from .tables import OocGraph
 
 _JOIN_DTYPE = np.dtype([("src", "<i4"), ("elabel", "<i4"), ("pid", "<i4")])
 _JOIN_KEYS = ("src", "elabel", "pid")
+_CKPT = "ckpt.json"
+_CKPT_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -215,8 +230,9 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
                        keep_stores: bool = False,
                        stats: Optional[IOStats] = None,
                        io_threads: int = 1, prefetch_depth: int = 2,
-                       aio: Optional[aio_mod.AioConfig] = None
-                       ) -> OocBisimResult:
+                       aio: Optional[aio_mod.AioConfig] = None,
+                       checkpoint: bool = False,
+                       resume: bool = False) -> OocBisimResult:
     """Out-of-core Build_Bisim. Accepts an in-memory `Graph` (spilled to
     chunked tables first) or an `OocGraph` (whose chunk geometry wins).
 
@@ -241,9 +257,17 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
     much.  An explicit ``aio`` config (the maintenance backend shares
     one across builds) overrides the two knobs; the caller then owns its
     lifecycle.
+
+    checkpoint=True commits a ``ckpt.json`` after every completed level;
+    resume=True continues from it if present (a missing checkpoint just
+    builds from scratch).  Both require an explicit ``workdir`` — the
+    checkpoint's whole point is surviving this process, so it cannot
+    live in an owned tempdir that error cleanup deletes.
     """
     if mode not in ("sorted", "dedup_hash", "multiset"):
         raise ValueError(f"unknown signature mode: {mode}")
+    if (checkpoint or resume) and workdir is None:
+        raise ValueError("checkpoint/resume require an explicit workdir")
     dedup = mode != "multiset"
     owns_workdir = workdir is None
     if owns_workdir:
@@ -259,7 +283,7 @@ def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
             chunk_nodes=chunk_nodes, early_stop=early_stop,
             workdir=workdir, spill_threshold=spill_threshold,
             use_kernel=use_kernel, keep_stores=keep_stores, stats=stats,
-            aio=aio)
+            aio=aio, checkpoint=checkpoint, resume=resume)
     except BaseException:
         if owns_workdir:
             # a failed build must not strand GBs of spilled tables in a
@@ -277,7 +301,9 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
                   workdir: str, spill_threshold: int,
                   use_kernel: bool, keep_stores: bool = False,
                   stats: Optional[IOStats] = None,
-                  aio: Optional[aio_mod.AioConfig] = None) -> OocBisimResult:
+                  aio: Optional[aio_mod.AioConfig] = None,
+                  checkpoint: bool = False,
+                  resume: bool = False) -> OocBisimResult:
     io = stats if stats is not None else IOStats()
     if aio is None:
         aio = aio_mod.AioConfig(io_threads=0)
@@ -298,7 +324,8 @@ def _build_oocore(graph: Union[Graph, OocGraph], k: int, *, mode: str,
         return _build_oocore_inner(
             ooc, k, mode=mode, dedup=dedup, early_stop=early_stop,
             workdir=workdir, spill_threshold=spill_threshold,
-            use_kernel=use_kernel, keep_stores=keep_stores, io=io, aio=aio)
+            use_kernel=use_kernel, keep_stores=keep_stores, io=io, aio=aio,
+            checkpoint=checkpoint, resume=resume)
     finally:
         if restore_graph_aio:
             ooc.aio = None
@@ -308,11 +335,22 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
                         early_stop: bool, workdir: str,
                         spill_threshold: int, use_kernel: bool,
                         keep_stores: bool, io: IOStats,
-                        aio: aio_mod.AioConfig) -> OocBisimResult:
+                        aio: aio_mod.AioConfig,
+                        checkpoint: bool = False,
+                        resume: bool = False) -> OocBisimResult:
     n = ooc.num_nodes
     c_edges = ooc.chunk_edges
     c_nodes = ooc.chunk_nodes
     kept_stores: list = []
+    # everything that must match for a checkpoint to be resumable (k may
+    # differ: resuming with a larger k just builds more levels)
+    params = dict(mode=mode, dedup=dedup, num_nodes=n,
+                  chunk_edges=c_edges, chunk_nodes=c_nodes,
+                  spill_threshold=int(spill_threshold),
+                  keep_stores=bool(keep_stores))
+    ckpt_path = os.path.join(workdir, _CKPT)
+    pid_sums: dict = {}      # pid file basename -> [rows, crc32]
+    store_states: list = []  # per retired level: SpillableSigStore.state()
 
     def _pid_path(j: int) -> str:
         return os.path.join(workdir, f"pid_{j:03d}.npy")
@@ -328,37 +366,116 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
 
     def _retire_store(store: SpillableSigStore) -> None:
         if keep_stores:
+            if checkpoint:
+                # a retired store is never written again during the
+                # build; flush now so its run files are final and the
+                # checkpoint can describe them
+                store.flush()
+                store_states.append(store.state())
             kept_stores.append(store)
         else:
             store.close()
+
+    def _write_ckpt(level: int, counts, it_stats, converged_at) -> None:
+        atomic_write_json(ckpt_path, {
+            "version": _CKPT_VERSION, "params": params, "level": level,
+            "counts": [int(c) for c in counts],
+            "it_stats": [dataclasses.asdict(s) for s in it_stats],
+            "io": io.to_dict(), "pids": pid_sums,
+            "converged_at": converged_at,
+            "stores": store_states if keep_stores else None,
+        })
+
+    def _result(pid_paths, counts, it_stats, converged_at):
+        return OocBisimResult(
+            workdir=workdir, pid_paths=pid_paths, counts=counts,
+            stats=it_stats, io=io, converged_at=converged_at,
+            k_requested=k, num_nodes=n,
+            stores=kept_stores if keep_stores else None,
+            next_pids=list(counts) if keep_stores else None,
+            aio=aio.stats)
+
+    # ------------------------------------------------------------ resume
+    start_level = 0
+    converged_at = None
+    if resume and os.path.exists(ckpt_path):
+        ck = read_json(ckpt_path)
+        if ck.get("version") != _CKPT_VERSION or ck.get("params") != params:
+            raise ValueError(
+                f"checkpoint in {workdir!r} does not match this build "
+                f"(checkpoint params {ck.get('params')!r}, ours "
+                f"{params!r})")
+        io.restore(ck["io"])  # counters continue, not reset
+        pid_sums.update(ck["pids"])
+        for rel in sorted(pid_sums):
+            rows, crc = pid_sums[rel]
+            # verify every finished pid file before trusting it; the
+            # verification read is the recovery scan, charged to io
+            arr = verify_npy(os.path.join(workdir, rel), crc,
+                             expected_rows=rows)
+            io.count_scan(arr.shape[0], arr.nbytes)
+        level = int(ck["level"])
+        counts = [int(c) for c in ck["counts"]]
+        it_stats = [IterationStats(**d) for d in ck["it_stats"]]
+        pid_paths = [_pid_path(j) for j in range(level + 1)]
+        converged_at = ck.get("converged_at")
+        if keep_stores:
+            store_states.extend(ck.get("stores") or [])
+            for j, st in enumerate(store_states):
+                s = _new_store("", j)
+                s.adopt_state(st)
+                kept_stores.append(s)
+        # drop the killed run's stale scratch: per-iteration dirs,
+        # unpublished writer temps, and store dirs past the checkpoint
+        for name in os.listdir(workdir):
+            p = os.path.join(workdir, name)
+            if name.startswith("it") and os.path.isdir(p):
+                shutil.rmtree(p, ignore_errors=True)
+            elif name.endswith(".aio-tmp"):
+                os.remove(p)
+        if keep_stores:
+            sroot = os.path.join(workdir, "stores")
+            if os.path.isdir(sroot):
+                for name in os.listdir(sroot):
+                    if (name.startswith("lvl_")
+                            and int(name[4:]) >= len(store_states)):
+                        shutil.rmtree(os.path.join(sroot, name),
+                                      ignore_errors=True)
+        start_level = level + 1
+        if converged_at is not None or start_level > k:
+            return _result(pid_paths, counts, it_stats, converged_at)
 
     # ---------------------------------------------------- iteration 0
     # Rank node labels into pId_0, streaming N_t chunk by chunk through
     # the store — the paper's one-off `sort(|N_t|)` term.  The N_t scan
     # is prefetched (via ooc.aio) and the pid file is appended through a
     # double-buffered StreamingWriter (atomic rename on close).
-    t0 = time.perf_counter()
-    s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
-    it_dir = os.path.join(workdir, "it000")
-    store = _new_store(it_dir, 0)
-    next_pid = 0
-    with aio.writer(_pid_path(0), np.int32, n) as pid_w:
-        for base, labels in ooc.iter_nodes(io):
-            pids_chunk, next_pid = store.get_or_assign(label_key(labels),
-                                                       next_pid)
-            pid_w.write(pids_chunk.astype(np.int32))
-            io.count_sort(labels.shape[0], labels.shape[0] * 4)  # ranking
-    _retire_store(store)
-    shutil.rmtree(it_dir, ignore_errors=True)
-    counts = [next_pid]
-    it_stats = [IterationStats(0, next_pid, time.perf_counter() - t0,
-                               bytes_sorted=io.sort_bytes - s_sort0,
-                               bytes_scanned=io.scan_bytes - s_scan0)]
-    pid_paths = [_pid_path(0)]
+    if start_level == 0:
+        t0 = time.perf_counter()
+        s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
+        it_dir = os.path.join(workdir, "it000")
+        store = _new_store(it_dir, 0)
+        next_pid = 0
+        with aio.writer(_pid_path(0), np.int32, n) as pid_w:
+            for base, labels in ooc.iter_nodes(io):
+                pids_chunk, next_pid = store.get_or_assign(
+                    label_key(labels), next_pid)
+                pid_w.write(pids_chunk.astype(np.int32))
+                io.count_sort(labels.shape[0], labels.shape[0] * 4)  # rank
+        pid_sums["pid_000.npy"] = [n, pid_w.checksum]
+        _retire_store(store)
+        shutil.rmtree(it_dir, ignore_errors=True)
+        counts = [next_pid]
+        it_stats = [IterationStats(0, next_pid, time.perf_counter() - t0,
+                                   bytes_sorted=io.sort_bytes - s_sort0,
+                                   bytes_scanned=io.scan_bytes - s_scan0)]
+        pid_paths = [_pid_path(0)]
+        if checkpoint:
+            _write_ckpt(0, counts, it_stats, None)
+        start_level = 1
 
     pid0_mm = np.load(_pid_path(0), mmap_mode="r")
-    converged_at = None
-    for j in range(1, k + 1):
+    for j in range(start_level, k + 1):
         t0 = time.perf_counter()
         s_sort0, s_scan0 = io.sort_bytes, io.scan_bytes
         it_dir = os.path.join(workdir, f"it{j:03d}")
@@ -437,7 +554,12 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
             pid_w.close()
         except BaseException:
             pid_w.abort()
+            # the incomplete level's store is scratch: discard its spill
+            # runs (a resume rebuilds this level from pid_{j-1}) so an
+            # interrupted build leaks neither files nor pending futures
+            store.close()
             raise
+        pid_sums[f"pid_{j:03d}.npy"] = [n, pid_w.checksum]
         _retire_store(store)
         shutil.rmtree(it_dir, ignore_errors=True)
 
@@ -449,11 +571,9 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
             bytes_scanned=io.scan_bytes - s_scan0))
         if early_stop and counts[-1] == counts[-2]:
             converged_at = j
+        if checkpoint:
+            _write_ckpt(j, counts, it_stats, converged_at)
+        if converged_at is not None:
             break
 
-    return OocBisimResult(
-        workdir=workdir, pid_paths=pid_paths, counts=counts, stats=it_stats,
-        io=io, converged_at=converged_at, k_requested=k, num_nodes=n,
-        stores=kept_stores if keep_stores else None,
-        next_pids=list(counts) if keep_stores else None,
-        aio=aio.stats)
+    return _result(pid_paths, counts, it_stats, converged_at)

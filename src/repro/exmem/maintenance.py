@@ -34,22 +34,42 @@ grow by one `sort(|E_t|)` (table maintenance) plus k sequential E_t/N_t
 scans and k frontier-sized sorts — within the paper's
 `O(k·sort(|E_t|) + k·sort(|N_t|))` maintenance bound, and linear in k
 (asserted by tests).
+
+Durability (``wal=True``): the backend owns a group-commit
+`exmem.durability.WriteAheadLog` under ``workdir/wal`` — every logical
+update batch the maintainer applies is appended (via `StreamingWriter`)
+*before* the table/pid mutations start, and becomes durable at the
+fsync'd commit line (every ``wal_group`` appends).  `snapshot()`
+persists the whole maintained state — graph tables, pid files, flushed
+store runs, tombstones, next-pid counters — as a manifest-committed
+directory under ``workdir/snapshot`` (atomic dir swap; the manifest is
+the commit record), pruning WAL records the snapshot absorbs.
+`OocBackend.restore(workdir)` reopens it with full checksum
+verification (a corrupted artifact raises `ChecksumError`, never a
+silently wrong partition) and `BisimMaintainer.restore` then redo-
+replays the committed WAL tail — the crash-recovery protocol the fuzz
+harness kills at every injected fault point.  Snapshot + recovery I/O
+is O(k·sort/scan of the tables), charged to `self.io`.
 """
 from __future__ import annotations
 
 import os
 import shutil
 import tempfile
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import hashes_np
+from repro.core.integrity import ChecksumError
 from repro.core.maintenance import MaintenanceBackend
+from repro.core.sig_store import SpillableSigStore
 from repro.graph.storage import Graph
 
-from .aio import AioConfig, Pipeline
+from .aio import AioConfig, Pipeline, atomic_save
 from .build import build_bisim_oocore
+from .durability import (Manifest, WriteAheadLog, atomic_write_json,
+                         commit_dir_swap, read_json)
 from .runs import IOStats
 from .tables import TST_DTYPE, OocGraph
 
@@ -68,7 +88,8 @@ class OocBackend(MaintenanceBackend):
                  chunk_edges: int = 1 << 16,
                  chunk_nodes: Optional[int] = None,
                  spill_threshold: int = 1 << 20,
-                 io_threads: int = 1, prefetch_depth: int = 2):
+                 io_threads: int = 1, prefetch_depth: int = 2,
+                 wal: bool = False, wal_group: int = 1):
         self.io = IOStats()
         # one async pipeline per backend: the builds it runs, its table
         # scans, and its pid-file rewrites all share the executor and the
@@ -99,6 +120,10 @@ class OocBackend(MaintenanceBackend):
         self._build_dir: Optional[str] = None
         self._build_seq = 0
         self._device = False
+        self._closed = False
+        self._wal = (WriteAheadLog(os.path.join(workdir, "wal"),
+                                   group=wal_group, aio=self.aio)
+                     if wal else None)
 
     # ----------------------------------------------------- device capability
     def enable_device(self) -> bool:
@@ -148,12 +173,183 @@ class OocBackend(MaintenanceBackend):
             self._build_dir = None
 
     def close(self) -> None:
-        """Release stores, pid files, the pipeline executor, and (if
-        owned) the workdir."""
-        self._dispose_build()
-        self.aio.close()
-        if self._owns_workdir:
-            shutil.rmtree(self.workdir, ignore_errors=True)
+        """Release stores, pid files, the WAL, the pipeline executor, and
+        (if owned) the workdir.  Idempotent, and safe mid-teardown after
+        an injected crash: every stage runs even if an earlier one threw,
+        so no aio worker threads or spill files outlive the backend."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._wal is not None:
+                self._wal.close()  # commits appended-but-pending records
+        finally:
+            self._dispose_build()
+            self.aio.close()
+            if self._owns_workdir:
+                shutil.rmtree(self.workdir, ignore_errors=True)
+
+    # ------------------------------------------------------------ durability
+    @property
+    def wal_supported(self) -> bool:
+        return self._wal is not None
+
+    def wal_append(self, op: str, arrays: dict) -> int:
+        lsn = self._wal.append(op, arrays)
+        self.io.bump("runs_written")
+        return lsn
+
+    def wal_flush(self) -> None:
+        if self._wal is not None:
+            self._wal.commit()
+
+    def wal_replay_records(self, after_lsn: int = 0):
+        if self._wal is None:
+            return
+        for lsn, op, arrays in self._wal.replay(after_lsn):
+            nbytes = sum(int(a.nbytes) for a in arrays.values())
+            self.io.count_scan(max(len(arrays), 1), nbytes)
+            yield lsn, op, arrays
+
+    def snapshot(self, state: dict) -> None:
+        """Persist graph tables, pid history, flushed store runs, and the
+        maintainer `state` as a manifest-committed snapshot directory.
+        The write order is the commit protocol: all bulk artifacts, then
+        ``state.json``, then the manifest (the commit record), then the
+        atomic dir swap into ``workdir/snapshot`` — a crash anywhere
+        leaves either the previous snapshot or a tmp dir a later
+        snapshot overwrites, never a half-snapshot that verifies."""
+        if self.stores is None:
+            raise RuntimeError("snapshot() before build()")
+        tmp = os.path.join(self.workdir, "snapshot.aio-tmpdir")
+        live = os.path.join(self.workdir, "snapshot")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        man = Manifest()
+        # graph tables: copied whole; their own chunk manifest (already
+        # inside the directory) re-verifies them at restore
+        self.ooc.save(os.path.join(tmp, "graph"))
+        self.io.count_scan(self.ooc.num_nodes + 2 * self.ooc.num_edges,
+                           self.ooc.num_nodes * 4
+                           + 2 * self.ooc.num_edges * 12)
+        # pid files: one sequential read+write per level, checksummed
+        # from the bytes in hand
+        for j, path in enumerate(self.pid_paths):
+            arr = np.load(path)
+            rel = f"pid_{j:03d}.npy"
+            atomic_save(os.path.join(tmp, rel), arr)
+            man.add_array(rel, arr)
+            self.io.count_scan(arr.shape[0], arr.nbytes * 2)
+        # stores: flush the resident runs so the on-disk files are the
+        # whole store, then hard-copy them with their recorded checksums
+        store_states = []
+        for j, s in enumerate(self.stores):
+            s.flush()
+            st = s.state()
+            store_states.append(st)
+            sdir = os.path.join(tmp, "stores", f"lvl_{j:03d}")
+            os.makedirs(sdir, exist_ok=True)
+            for kp_rel, pp_rel, ln in st["runs"]:
+                for rel, nbytes in ((kp_rel, ln * 8), (pp_rel, ln * 8)):
+                    shutil.copy2(os.path.join(s.spill_dir, rel),
+                                 os.path.join(sdir, rel))
+                    man.add_checksum(f"stores/lvl_{j:03d}/{rel}", ln,
+                                     st["sums"][rel])
+                    self.io.count_sort(ln, nbytes)
+        tomb = np.asarray(state["tombstone"], dtype=bool)
+        atomic_save(os.path.join(tmp, "tombstone.npy"), tomb)
+        man.add_array("tombstone.npy", tomb)
+        wal_lsn = self._wal.committed_lsn if self._wal is not None else 0
+        st_json = {k: v for k, v in state.items() if k != "tombstone"}
+        st_json.update(
+            next_pid=[int(x) for x in self.next_pid],
+            levels=len(self.pid_paths),
+            spill_threshold=int(self.spill_threshold),
+            wal=self._wal is not None, wal_lsn=int(wal_lsn),
+            wal_group=(self._wal.group if self._wal is not None else 1),
+            stores=store_states)
+        atomic_write_json(os.path.join(tmp, "state.json"), st_json)
+        man.write(tmp)  # the snapshot's commit record
+        commit_dir_swap(live, tmp)
+        if self._wal is not None:
+            # records the snapshot absorbed are never replayed again
+            self._wal.truncate(wal_lsn)
+
+    @classmethod
+    def restore(cls, workdir: str, *,
+                io_threads: int = 1,
+                prefetch_depth: int = 2) -> Tuple["OocBackend", dict]:
+        """Reopen the last committed snapshot under ``workdir``.
+
+        Every artifact is checksum-verified as it is adopted (graph
+        chunks via the table manifest, pid files and store runs via the
+        snapshot manifest — runs lazily at first probe), so corruption
+        raises `ChecksumError` here rather than surfacing as a wrong
+        partition.  The pre-crash live tables and build dirs are
+        discarded: recovery is snapshot + committed WAL redo, nothing
+        else.  Returns ``(backend, state)`` for
+        `BisimMaintainer.restore`, which performs the WAL replay."""
+        snap = os.path.join(workdir, "snapshot")
+        if not os.path.isdir(snap):
+            raise ChecksumError(f"no committed snapshot under {workdir!r}")
+        man = Manifest.load(snap)
+        st = read_json(os.path.join(snap, "state.json"))
+        self = object.__new__(cls)
+        self.io = IOStats()
+        self.aio = AioConfig(io_threads=io_threads,
+                             prefetch_depth=prefetch_depth)
+        self._owns_workdir = False
+        self.workdir = workdir
+        self.spill_threshold = int(st.get("spill_threshold", 1 << 20))
+        self._pid_mms = {}
+        self._build_seq = 0
+        self._device = False
+        self._closed = False
+        # drop the killed process's live state: half-mutated tables,
+        # partial builds, unpublished writer temps
+        for name in os.listdir(workdir):
+            p = os.path.join(workdir, name)
+            if name == "graph" or name.startswith("build_") \
+                    or name == "restored":
+                shutil.rmtree(p, ignore_errors=True)
+            elif name.endswith(".aio-tmp") or name == "snapshot.aio-tmpdir":
+                (shutil.rmtree(p, ignore_errors=True) if os.path.isdir(p)
+                 else os.remove(p))
+        graph_dir = os.path.join(workdir, "graph")
+        shutil.copytree(os.path.join(snap, "graph"), graph_dir)
+        self.ooc = OocGraph.load(graph_dir, verify=True, stats=self.io)
+        self.ooc.aio = self.aio
+        # pid files + store runs + tombstone: verified while copying
+        bdir = os.path.join(workdir, "restored")
+        man.verify_copy(snap, bdir, stats=self.io)
+        self._build_dir = bdir
+        levels = int(st["levels"])
+        self.pid_paths = [os.path.join(bdir, f"pid_{j:03d}.npy")
+                          for j in range(levels)]
+        self.stores = []
+        for j, sst in enumerate(st["stores"]):
+            sdir = os.path.join(bdir, "stores", f"lvl_{j:03d}")
+            os.makedirs(sdir, exist_ok=True)
+            s = SpillableSigStore(
+                spill_threshold=self.spill_threshold, spill_dir=sdir,
+                io=self.io, aio=self.aio)
+            s.adopt_state(sst)
+            self.stores.append(s)
+        self.next_pid = [int(x) for x in st["next_pid"]]
+        # start_lsn floors the numbering past the snapshot even when the
+        # snapshot truncated the whole log (empty commits.log)
+        self._wal = (WriteAheadLog(os.path.join(workdir, "wal"),
+                                   group=int(st.get("wal_group", 1)),
+                                   aio=self.aio,
+                                   start_lsn=int(st.get("wal_lsn", 0)))
+                     if st.get("wal", False) else None)
+        state = dict(
+            k=int(st["k"]), mode=st["mode"],
+            rebuild_threshold=float(st["rebuild_threshold"]),
+            wal=bool(st.get("wal", False)),
+            wal_lsn=int(st.get("wal_lsn", 0)),
+            tombstone=np.load(os.path.join(bdir, "tombstone.npy")))
+        return self, state
 
     # ---------------------------------------------------------- pid history
     def _pid(self, j: int) -> np.ndarray:

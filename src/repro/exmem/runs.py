@@ -86,6 +86,13 @@ class IOStats:
         return {f.name: getattr(self, f.name)
                 for f in dataclasses.fields(self)}
 
+    def restore(self, d: dict) -> None:
+        """Reset every counter to a checkpointed `to_dict` snapshot, so a
+        resumed build's accounting continues instead of restarting."""
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, int(d.get(f.name, 0)))
+
 
 def make_records(cols: dict) -> np.ndarray:
     """Pack parallel 1-D columns into one structured record array."""

@@ -26,7 +26,15 @@ resident memory stays a constant number of chunks and a partially
 written table is never visible under the live name.  The swap of the
 two edge orders plus the meta rewrite is *not* transactional: a crash
 mid-update can leave the directory needing a rebuild from the maintained
-graph — callers (the maintenance backend) treat it as scratch state.
+graph — callers (the maintenance backend) treat it as scratch state and
+recover via snapshot + WAL replay (`exmem.durability`).
+
+Durability: every chunk's CRC-32 is recorded (computed from the bytes
+already in memory at write time — zero extra I/O) in a ``manifest.json``
+written atomically next to ``meta.json``.  `OocGraph.load` verifies the
+whole manifest by default, so a torn chunk, a flipped byte, or a
+truncated table raises `repro.core.integrity.ChecksumError` at open
+instead of surfacing as a silently wrong partition.
 """
 from __future__ import annotations
 
@@ -37,10 +45,13 @@ from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import fault_point, with_retries
+from repro.core.integrity import ChecksumError, crc32_array
 from repro.core.kway import merge_sorted_sources
 from repro.graph.storage import Graph
 
 from . import aio as aio_mod
+from .durability import Manifest
 from .runs import IOStats, rebuffer
 
 NODE_DTYPE = np.dtype([("label", "<i4")])
@@ -51,14 +62,19 @@ _META = "meta.json"
 _FORMAT_VERSION = 1
 
 
-def _write_chunked(table_dir: str, rec: np.ndarray, chunk_rows: int) -> int:
+def _write_chunked(table_dir: str, rec: np.ndarray,
+                   chunk_rows: int) -> Tuple[int, dict]:
     os.makedirs(table_dir, exist_ok=True)
-    n_chunks = 0
+    name = os.path.basename(table_dir)
+    n_chunks, sums = 0, {}
     for i, s in enumerate(range(0, rec.shape[0], chunk_rows)):
-        np.save(os.path.join(table_dir, f"chunk_{i:06d}.npy"),
-                rec[s:s + chunk_rows])
+        part = rec[s:s + chunk_rows]
+        aio_mod.atomic_save(os.path.join(table_dir, f"chunk_{i:06d}.npy"),
+                            part)
+        sums[f"{name}/chunk_{i:06d}.npy"] = [int(part.shape[0]),
+                                             crc32_array(part)]
         n_chunks += 1
-    return n_chunks
+    return n_chunks, sums
 
 
 class ChunkedColumn:
@@ -125,6 +141,8 @@ class OocGraph:
         self.chunk_edges = int(meta["chunk_edges"])
         self.num_node_chunks = int(meta["num_node_chunks"])
         self.num_edge_chunks = int(meta["num_edge_chunks"])
+        manifest = Manifest.load_if_present(root)
+        self._sums: dict = manifest.files if manifest is not None else {}
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -144,19 +162,22 @@ class OocGraph:
         os.makedirs(root, exist_ok=True)
         nodes = np.empty(graph.num_nodes, NODE_DTYPE)
         nodes["label"] = graph.node_labels
-        n_node_chunks = _write_chunked(os.path.join(root, "nodes"), nodes,
-                                       chunk_nodes)
+        n_node_chunks, sums = _write_chunked(os.path.join(root, "nodes"),
+                                             nodes, chunk_nodes)
         tst = np.empty(graph.num_edges, TST_DTYPE)
         tst["src"], tst["elabel"], tst["dst"] = (graph.src, graph.elabel,
                                                  graph.dst)
-        n_edge_chunks = _write_chunked(os.path.join(root, "edges_tst"), tst,
-                                       chunk_edges)
+        n_edge_chunks, s = _write_chunked(os.path.join(root, "edges_tst"),
+                                          tst, chunk_edges)
+        sums.update(s)
         order = graph.in_order()  # (dst, src) sort: the E_tts copy
         tts = np.empty(graph.num_edges, TTS_DTYPE)
         tts["dst"], tts["src"], tts["elabel"] = (graph.dst[order],
                                                  graph.src[order],
                                                  graph.elabel[order])
-        _write_chunked(os.path.join(root, "edges_tts"), tts, chunk_edges)
+        _, s = _write_chunked(os.path.join(root, "edges_tts"), tts,
+                              chunk_edges)
+        sums.update(s)
         meta = dict(version=_FORMAT_VERSION, num_nodes=graph.num_nodes,
                     num_edges=graph.num_edges, chunk_nodes=chunk_nodes,
                     chunk_edges=chunk_edges, num_node_chunks=n_node_chunks,
@@ -164,6 +185,7 @@ class OocGraph:
         with open(os.path.join(root, _META), "w") as f:
             json.dump(meta, f, indent=1, sort_keys=True)
             f.write("\n")
+        Manifest(files=sums).write(root)
         return cls(root, aio=aio)
 
     # ------------------------------------------------------------------ IO
@@ -172,16 +194,51 @@ class OocGraph:
         shutil.copytree(self.root, path)
 
     @classmethod
-    def load(cls, path: str) -> "OocGraph":
-        return cls(path)
+    def load(cls, path: str, *, verify: bool = True,
+             stats: Optional[IOStats] = None) -> "OocGraph":
+        """Open a saved table directory.  With ``verify`` (the default),
+        every chunk is checked against the manifest's row counts and
+        CRC-32s — a torn, truncated, or byte-flipped table raises
+        `ChecksumError` here, never a silently wrong partition later."""
+        g = cls(path)
+        if verify:
+            g.verify(stats=stats)
+        return g
+
+    def verify(self, *, stats: Optional[IOStats] = None) -> None:
+        """Full checksum verification of every chunk against the
+        manifest (one sequential read, charged to ``stats`` as a scan)."""
+        if not self._sums:
+            raise ChecksumError(
+                f"no manifest for OocGraph at {self.root!r}; cannot "
+                "verify integrity")
+        expect = {f"nodes/chunk_{i:06d}.npy"
+                  for i in range(self.num_node_chunks)}
+        for t in ("edges_tst", "edges_tts"):
+            expect |= {f"{t}/chunk_{i:06d}.npy"
+                       for i in range(self.num_edge_chunks)}
+        missing = expect - set(self._sums)
+        if missing:
+            raise ChecksumError(
+                f"manifest at {self.root!r} is missing entries for "
+                f"{sorted(missing)[:3]}...")
+        Manifest(files=self._sums).verify(self.root, sorted(expect),
+                                          stats=stats)
 
     # ------------------------------------------------------------ scanning
     def _iter_table(self, name: str, n_chunks: int,
                     stats: Optional[IOStats]) -> Iterator[np.ndarray]:
+        def _read(path):
+            # retry below the generator: a generator that has raised
+            # cannot be re-driven, so transient-error recovery must wrap
+            # the individual chunk load, not the scan
+            fault_point("read", path)
+            return np.array(np.load(path, mmap_mode="r"))
+
         def _raw():
             for i in range(n_chunks):
                 path = os.path.join(self.root, name, f"chunk_{i:06d}.npy")
-                chunk = np.array(np.load(path, mmap_mode="r"))
+                chunk = with_retries(lambda: _read(path))
                 if stats is not None:
                     stats.count_scan(chunk.shape[0], chunk.nbytes)
                 yield chunk
@@ -229,6 +286,8 @@ class OocGraph:
         with open(os.path.join(self.root, _META), "w") as f:
             json.dump(meta, f, indent=1, sort_keys=True)
             f.write("\n")
+        # manifest last: it is the commit point of the whole mutation
+        Manifest(files=self._sums).write(self.root)
 
     def _rewrite_table(self, name: str, chunks, chunk_rows: int):
         """Stream `chunks` into a fresh chunked dir (exact `chunk_rows`
@@ -244,6 +303,7 @@ class OocGraph:
         shutil.rmtree(bak, ignore_errors=True)
         os.makedirs(tmp)
         n_chunks = n_rows = 0
+        sums = {}
         # rebuffer emits fresh (or about-to-be-abandoned) arrays, so the
         # background saves own their chunks safely
         saver = aio_mod.BoundedSaver(self.aio)
@@ -251,6 +311,10 @@ class OocGraph:
             for chunk in rebuffer(chunks, chunk_rows):
                 saver.save(os.path.join(tmp, f"chunk_{n_chunks:06d}.npy"),
                            chunk)
+                # checksum from the bytes already in hand, before the
+                # (possibly async) save — zero extra I/O
+                sums[f"{name}/chunk_{n_chunks:06d}.npy"] = [
+                    int(chunk.shape[0]), crc32_array(chunk)]
                 n_chunks += 1
                 n_rows += chunk.shape[0]
         finally:
@@ -260,6 +324,9 @@ class OocGraph:
             os.replace(old, bak)
         os.replace(tmp, old)
         shutil.rmtree(bak, ignore_errors=True)
+        for rel in [r for r in self._sums if r.startswith(name + "/")]:
+            del self._sums[rel]
+        self._sums.update(sums)
         return n_chunks, n_rows
 
     @staticmethod

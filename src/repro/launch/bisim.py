@@ -16,6 +16,13 @@ disk-resident `OocBackend`).
         add-edges --count 16
     PYTHONPATH=src python -m repro.launch.bisim --oocore \
         --generator random --nodes 5000 --k 4 compact --delete-nodes 3,7,11
+
+Durability: `--checkpoint --workdir DIR` makes the oocore build write a
+per-level checkpoint (add `--resume` to continue a killed build from the
+last finished level); `--wal --workdir DIR` runs the maintenance
+subcommands write-ahead-logged with a final snapshot, and the `recover`
+subcommand re-opens such a workdir after a crash (snapshot + committed
+WAL replay) and reports the recovered partition.
 """
 from __future__ import annotations
 
@@ -81,6 +88,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-prefetch", action="store_true",
                     help="oocore: disable the async I/O pipeline "
                          "(same as --io-threads 0)")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="oocore build: write a per-level checkpoint to "
+                         "--workdir (required)")
+    ap.add_argument("--resume", action="store_true",
+                    help="oocore build: resume a checkpointed build from "
+                         "the last finished level (implies --checkpoint)")
+    ap.add_argument("--wal", action="store_true",
+                    help="oocore maintenance: write-ahead-log every "
+                         "update and snapshot the backend afterwards "
+                         "(requires --workdir)")
+    ap.add_argument("--wal-group", type=int, default=1,
+                    help="oocore maintenance: WAL group-commit size "
+                         "(records per fsync; at most group-1 "
+                         "acknowledged updates can be lost)")
     ap.add_argument("--device-maintenance", action="store_true",
                     help="maintenance subcommands: run the frontier "
                          "signature fold (and, in-memory, the store "
@@ -92,7 +113,7 @@ def build_parser() -> argparse.ArgumentParser:
                          "array, or per-level 'pids_<j>' members with "
                          "--oocore (never materializes the full history)")
     sub = ap.add_subparsers(
-        dest="cmd", metavar="{add-edges,delete-node,compact}",
+        dest="cmd", metavar="{add-edges,delete-node,compact,recover}",
         help="maintenance subcommands: build the partition, apply one "
              "update through BisimMaintainer (in-memory, or OocBackend "
              "with --oocore), report per-level propagation + I/O")
@@ -113,6 +134,10 @@ def build_parser() -> argparse.ArgumentParser:
                                  "densely")
     ap_cmp.add_argument("--delete-nodes", default="", metavar="I,J,...",
                         help="tombstone these nodes first")
+    sub.add_parser("recover",
+                   help="re-open a crashed --wal workdir: restore the "
+                        "last snapshot (checksum-verified) and replay "
+                        "the committed WAL tail")
     return ap
 
 
@@ -149,6 +174,32 @@ def _report_update(rep, dt: float, m) -> None:
           f"partitions@k={len(np.unique(m.pid()))}")
 
 
+def run_recover(args) -> None:
+    """Re-open a crashed --wal workdir: verified snapshot + WAL replay."""
+    import numpy as np
+
+    from repro.core import BisimMaintainer
+    from repro.exmem import OocBackend
+
+    if not (args.oocore and args.workdir):
+        raise SystemExit("recover needs --oocore and --workdir")
+    t0 = time.perf_counter()
+    backend, state = OocBackend.restore(
+        args.workdir, io_threads=_io_threads(args),
+        prefetch_depth=args.prefetch_depth)
+    m = BisimMaintainer.restore(backend, state,
+                                device=args.device_maintenance)
+    dt = time.perf_counter() - t0
+    io = backend.io
+    print(f"recovered: k={m.k} mode={m.mode} "
+          f"nodes={backend.num_nodes} tombstones={m.num_tombstones} "
+          f"wal_lsn={state['wal_lsn']} in {dt:.2f}s")
+    print(f"recovery io: sort_cost={io.sort_cost} scan_cost={io.scan_cost} "
+          f"sortB={io.sort_bytes} scanB={io.scan_bytes}")
+    print(f"partitions@k={len(np.unique(m.pid()))}")
+    print(f"workdir: {backend.workdir}")
+
+
 def run_maintenance(args, g: Graph) -> None:
     import numpy as np
 
@@ -158,15 +209,20 @@ def run_maintenance(args, g: Graph) -> None:
         raise SystemExit(
             "maintenance subcommands support the single and --oocore "
             "engines (the distributed builder keeps no store)")
+    if args.wal and not (args.oocore and args.workdir):
+        raise SystemExit("--wal needs --oocore and --workdir (a tempdir "
+                         "workdir would be deleted on exit, defeating "
+                         "the point of durability)")
     t0 = time.perf_counter()
     if args.oocore:
         from repro.exmem import OocBackend
         backend = OocBackend(
             g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
             spill_threshold=args.spill_threshold, workdir=args.workdir,
-            io_threads=_io_threads(args), prefetch_depth=args.prefetch_depth)
+            io_threads=_io_threads(args), prefetch_depth=args.prefetch_depth,
+            wal=args.wal, wal_group=args.wal_group)
         m = BisimMaintainer(backend, args.k, mode=args.mode,
-                            device=args.device_maintenance)
+                            device=args.device_maintenance, wal=args.wal)
     else:
         backend = None
         m = BisimMaintainer(g, args.k, mode=args.mode,
@@ -205,6 +261,11 @@ def run_maintenance(args, g: Graph) -> None:
               f"{m.backend.num_nodes} nodes, {m.backend.num_edges} edges")
     dt = time.perf_counter() - t0
     _report_update(rep, dt, m)
+    if args.wal:
+        t0 = time.perf_counter()
+        m.snapshot()
+        print(f"snapshot: {time.perf_counter() - t0:.2f}s "
+              f"(wal truncated to lsn {backend._wal.committed_lsn})")
     if backend is not None:
         io1 = backend.io.to_dict()
         delta = {key: io1[key] - io0[key] for key in io1}
@@ -222,6 +283,9 @@ def run_maintenance(args, g: Graph) -> None:
 def main() -> None:
     args = build_parser().parse_args()
 
+    if args.cmd == "recover":
+        run_recover(args)  # no graph: state comes from the workdir
+        return
     g = make_graph(args)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
     if args.cmd:
@@ -236,7 +300,9 @@ def main() -> None:
             spill_threshold=args.spill_threshold,
             early_stop=not args.no_early_stop,
             io_threads=_io_threads(args),
-            prefetch_depth=args.prefetch_depth)
+            prefetch_depth=args.prefetch_depth,
+            checkpoint=args.checkpoint or args.resume,
+            resume=args.resume)
     elif args.distributed:
         res = build_bisim_distributed(
             g, args.k, mode=args.mode, ranking=args.ranking,

@@ -1,4 +1,4 @@
-"""Differential update-stream fuzz harness (ISSUE 5).
+"""Differential update-stream fuzz harness (ISSUE 5) + crash recovery.
 
 Seeded random streams of insert_edges / delete_edges / delete_node /
 compact / change_k are applied through `BisimMaintainer` and checked
@@ -10,19 +10,28 @@ after *every* step:
     (exact ints, not renaming), identical next_pid sequences, and (disk
     backend) exactly equal IOStats.
 
+The crash-recovery fuzz (PR 6) drives the same op generators through a
+WAL'd `OocBackend` and kills the process (via the fault-injection
+layer) at seeded points *anywhere* in the snapshot + update stream;
+recovery (snapshot restore + committed-WAL replay + re-application of
+lost ops) must land on the bit-identical pid history of the never-killed
+run, and a from-scratch `build_bisim` oracle must agree.
+
 Always-on coverage is fixed-seed via plain parametrization; when
 hypothesis is installed (`hypo_compat`) extra random seeds run on top.
 ``UPDATE_FUZZ_STEPS`` bounds the stream length (the CI short-budget
 knob).
 """
+import glob
 import os
 
 import numpy as np
 import pytest
 from hypo_compat import given, strategies as st
 
-from repro.core import (BisimMaintainer, DeviceSigStore, SigStore,
-                        build_bisim, frontier_fold, hashes_np,
+from repro.core import (BisimMaintainer, ChecksumError, DeviceSigStore,
+                        FaultPlan, InjectedCrash, SigStore, build_bisim,
+                        frontier_fold, hashes_np, install_fault_plan,
                         same_partition)
 from repro.exmem import OocBackend
 from repro.graph import generators as gen
@@ -164,6 +173,143 @@ def test_fuzz_device_parity_ooc(tmp_path, gname, mode):
     _oracle_check(md, ("ooc-device", gname, mode))
     mh.backend.close()
     md.backend.close()
+
+
+# -------------------------------------------------- crash-recovery fuzz
+RECOVERY_GENERATORS = ["random", "structured"]   # >= 2 topologies
+RECOVERY_OPS = 6                                 # ops per stream
+_SNAPS = (2, 4)                                  # snapshot after these ops
+
+
+def _op_schedule(seed: int, n_ops: int = RECOVERY_OPS) -> list:
+    master = np.random.default_rng(seed)
+    return [OPS[int(master.integers(0, len(OPS)))] for _ in range(n_ops)]
+
+
+def _apply_indexed(m, ops, start, stop, seed) -> None:
+    """Apply ops[start:stop], each with its *own* rng seeded by its index
+    — so a recovered maintainer can re-apply exactly the ops the crash
+    lost, with identical argument draws, regardless of where it died."""
+    for i in range(start, stop):
+        _apply_op(m, ops[i], np.random.default_rng(seed + 7919 * (i + 1)))
+        if i + 1 in _SNAPS:
+            m.snapshot()
+
+
+def _wal_maintainer(workdir, gname, mode, k=2):
+    backend = OocBackend(GENERATORS[gname](), chunk_edges=32,
+                         chunk_nodes=24, spill_threshold=16,
+                         workdir=workdir, io_threads=0, wal=True)
+    return BisimMaintainer(backend, k, mode=mode, wal=True)
+
+
+def _snap_dir(tmp_path, gname, mode, seed=909):
+    """A workdir holding a committed snapshot with spilled store runs."""
+    wd = str(tmp_path / "m")
+    m = _wal_maintainer(wd, gname, mode)
+    ops = _op_schedule(seed)
+    _apply_indexed(m, ops, 0, _SNAPS[0], seed)
+    m.backend.aio.close()
+    return wd
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("gname", RECOVERY_GENERATORS)
+def test_fuzz_crash_recovery_at_seeded_kill_points(tmp_path, gname, mode):
+    """Kill the WAL'd maintenance stream at seeded fault points spread
+    over the whole snapshot + update schedule, recover, finish the
+    stream, and demand the bit-identical pid history of the never-killed
+    run (plus oracle agreement)."""
+    seed = 909
+    ops = _op_schedule(seed)
+
+    # the never-killed reference (same snapshots, same per-op rngs);
+    # record the WAL lsn after each op — an op appends one record, or
+    # none when it degenerates to a no-op (delete_edges on an empty
+    # graph) — to translate a recovered committed_lsn into "how many
+    # ops survived the crash"
+    m = _wal_maintainer(str(tmp_path / "ref"), gname, mode)
+    lsn_after = []
+    for i in range(len(ops)):
+        _apply_indexed(m, ops, i, i + 1, seed)
+        lsn_after.append(m.backend._wal.last_lsn)
+    ref_pids = [np.asarray(m.pids[j]).copy() for j in range(m.k + 1)]
+    ref_next = list(m.next_pid)
+    m.backend.close()
+
+    # observer pass: count the fault points in the post-first-snapshot
+    # segment (the part a kill can strand mid-flight)
+    m = _wal_maintainer(str(tmp_path / "obs"), gname, mode)
+    _apply_indexed(m, ops, 0, _SNAPS[0], seed)
+    with install_fault_plan(FaultPlan()) as obs:
+        _apply_indexed(m, ops, _SNAPS[0], len(ops), seed)
+    total = obs.points_seen
+    m.backend.close()
+    assert total > 10, "fault-injection coverage collapsed"
+
+    # seeded spread of kill points over the whole segment; the CI
+    # crash-recovery job (CRASH_SWEEP=full) uses a 4x denser spread
+    kill_rng = np.random.default_rng(seed)
+    density = 24 if os.environ.get("CRASH_SWEEP", "") == "full" else 6
+    points = sorted({1, total} | {int(x) for x in
+                                  kill_rng.integers(2, total, density)})
+    for n in points:
+        wd = str(tmp_path / f"kill_{n:04d}")
+        m = _wal_maintainer(wd, gname, mode)
+        _apply_indexed(m, ops, 0, _SNAPS[0], seed)
+        with install_fault_plan(FaultPlan(crash_at=n)):
+            with pytest.raises(InjectedCrash):
+                _apply_indexed(m, ops, _SNAPS[0], len(ops), seed)
+        m.backend.aio.close()   # the "dead" process: no clean close
+
+        be2, state = OocBackend.restore(wd, io_threads=0)
+        m2 = BisimMaintainer.restore(be2, state)
+        # the lsn marks say which ops survived (snapshot base + replayed
+        # committed records); re-apply everything after — a degenerate
+        # no-record op counted as "done" re-applies as a no-op anyway
+        committed = be2._wal.committed_lsn
+        done = 0
+        while done < len(ops) and lsn_after[done] <= committed:
+            done += 1
+        assert done <= len(ops), (n, done)
+        _apply_indexed(m2, ops, done, len(ops), seed)
+        assert m2.k == len(ref_pids) - 1
+        for j in range(m2.k + 1):
+            np.testing.assert_array_equal(
+                np.asarray(m2.pids[j]), ref_pids[j],
+                err_msg=f"{gname}/{mode} kill point {n}, level {j}")
+        assert list(m2.next_pid) == ref_next, (n,)
+        _oracle_check(m2, ("recovery", gname, mode, n))
+        be2.close()
+
+
+def test_fuzz_recovery_rejects_corrupted_store_run(tmp_path):
+    """A bit-flipped spill run inside the snapshot must fail recovery
+    with a checksum error, never restore a silently wrong store."""
+    wd = _snap_dir(tmp_path, "random", "sorted")
+    runs = sorted(glob.glob(os.path.join(wd, "snapshot", "stores", "*",
+                                         "*.npy")))
+    assert runs, "snapshot holds no spilled store runs"
+    with open(runs[0], "rb+") as f:
+        f.seek(os.path.getsize(runs[0]) - 5)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0x10]))
+    with pytest.raises(ChecksumError):
+        OocBackend.restore(wd, io_threads=0)
+
+
+def test_fuzz_recovery_rejects_truncated_table(tmp_path):
+    """A truncated graph table chunk inside the snapshot must fail
+    recovery at open, not surface later as a wrong partition."""
+    wd = _snap_dir(tmp_path, "structured", "multiset")
+    chunks = sorted(glob.glob(os.path.join(wd, "snapshot", "graph",
+                                           "edges_tst", "*.npy")))
+    assert chunks
+    with open(chunks[0], "rb+") as f:
+        f.truncate(os.path.getsize(chunks[0]) // 2)
+    with pytest.raises(ChecksumError):
+        OocBackend.restore(wd, io_threads=0)
 
 
 # ------------------------------------------------ hypothesis extra seeds
