@@ -13,6 +13,8 @@ import time
 
 from repro.core import build_bisim
 from repro.exmem import build_bisim_oocore
+from repro.obs import MetricsReport
+from repro.obs import tracer as obs
 
 from .datasets import suite
 
@@ -35,6 +37,9 @@ def run(scale: int = 1, k: int = 10):
             f"converged_at={res.converged_at};"
             f"final_partitions={res.counts[-1]};"
             f"partition_ratio={res.counts[-1] / g.num_nodes:.4f}"))
+    # one tracer across the oocore rows: the BENCH payload gains a
+    # "phases" breakdown (where the disk build's time actually goes)
+    tracer = obs.Tracer()
     for name in ("jamendo-like", "sp2b-like"):
         g = datasets[name]
         with tempfile.TemporaryDirectory() as td:
@@ -42,7 +47,9 @@ def run(scale: int = 1, k: int = 10):
             # chunk small enough that even jamendo-like (11k edges at
             # scale=1) is multi-chunk — the row must exercise the k-way
             # merge and windowed ranking, not the single-run fast path
-            res = build_bisim_oocore(g, k, chunk_edges=2048, workdir=td)
+            with obs.tracing(tracer):
+                res = build_bisim_oocore(g, k, chunk_edges=2048,
+                                         workdir=td)
             dt = time.perf_counter() - t0
             io = res.io
             rows.append((
@@ -51,7 +58,8 @@ def run(scale: int = 1, k: int = 10):
                 f"final_partitions={res.counts[-1]};"
                 f"sort_cost={io.sort_cost};scan_cost={io.scan_cost};"
                 f"spills={io.spills};runs={io.runs_written}"))
-    return rows
+    report = MetricsReport.from_tracer(tracer).as_dict()
+    return rows, {"phases": report["phases"], "levels": report["levels"]}
 
 
 def run_prefetch(scale: int = 1, k: int = 10, reps: int = 3):

@@ -14,6 +14,8 @@ import numpy as np
 from repro.core import BisimMaintainer, build_bisim
 from repro.exmem import OocBackend, build_bisim_oocore
 from repro.graph.storage import Graph
+from repro.obs import MetricsReport
+from repro.obs import tracer as obs
 
 from .datasets import suite
 
@@ -53,7 +55,10 @@ def run(scale: int = 1, k: int = 10, trials: int = 3):
             f"nodes_changed={changed / trials:.1f};"
             f"rebuild_us={np.mean(build_times) * 1e6:.0f};"
             f"speedup={np.mean(build_times) / np.mean(upd_times):.2f}x"))
-    # oocore: one trial per dataset (the disk build dominates the budget)
+    # oocore: one trial per dataset (the disk build dominates the budget);
+    # the update path runs traced so the BENCH payload carries a per-phase
+    # breakdown of where maintenance time goes
+    tracer = obs.Tracer()
     for name, g in list(suite(scale).items())[:2]:
         rng = np.random.default_rng(0)
         gg, (s, l, d) = _holdout(g, rng)
@@ -61,7 +66,8 @@ def run(scale: int = 1, k: int = 10, trials: int = 3):
         m = BisimMaintainer(backend, k)
         io0 = (backend.io.sort_cost, backend.io.scan_cost)
         t0 = time.perf_counter()
-        rep = m.add_edge(s, l, d)
+        with obs.tracing(tracer):
+            rep = m.add_edge(s, l, d)
         dt = time.perf_counter() - t0
         d_sort = backend.io.sort_cost - io0[0]
         d_scan = backend.io.scan_cost - io0[1]
@@ -76,7 +82,8 @@ def run(scale: int = 1, k: int = 10, trials: int = 3):
             f"sort_delta={d_sort};scan_delta={d_scan};"
             f"rebuild_us={dt_build * 1e6:.0f};"
             f"speedup={dt_build / dt:.2f}x"))
-    return rows
+    report = MetricsReport.from_tracer(tracer).as_dict()
+    return rows, {"phases": report["phases"], "levels": report["levels"]}
 
 
 def run_device_vs_host(scale: int = 1, k: int = 3, trials: int = 7):

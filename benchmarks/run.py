@@ -32,8 +32,10 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def write_json(name: str, rows, scale: int, seconds: float,
-               root: str = _REPO_ROOT) -> str:
-    """Emit BENCH_<name>.json: {name, scale, seconds, rows:[{name,us,meta}]}."""
+               root: str = _REPO_ROOT, extras: dict = None) -> str:
+    """Emit BENCH_<name>.json: {name, scale, seconds, rows:[{name,us,meta}]}.
+    ``extras`` (e.g. a ``phases`` table from `repro.obs`) merges into the
+    payload top level."""
     path = os.path.join(root, f"BENCH_{name}.json")
     payload = {
         "name": name,
@@ -42,6 +44,7 @@ def write_json(name: str, rows, scale: int, seconds: float,
         "rows": [{"name": rname, "us": round(float(us), 1), "meta": derived}
                  for rname, us, derived in rows],
     }
+    payload.update(extras or {})
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -63,12 +66,15 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
-        rows = fn(scale=args.scale) if scalable else fn()
+        out = fn(scale=args.scale) if scalable else fn()
         dt = time.perf_counter() - t0
+        # benchmarks may return (rows, extras) — extras (a "phases"
+        # breakdown from repro.obs, typically) lands in the JSON payload
+        rows, extras = out if isinstance(out, tuple) else (out, {})
         for rname, us, derived in rows:
             print(f"{name}/{rname},{us:.1f},{derived}")
         if not args.no_json:
-            path = write_json(name, rows, args.scale, dt)
+            path = write_json(name, rows, args.scale, dt, extras=extras)
             print(f"# wrote {path}", file=sys.stderr)
     print(f"# total benchmark wall time: "
           f"{time.perf_counter() - t_start:.1f}s", file=sys.stderr)

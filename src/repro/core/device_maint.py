@@ -51,6 +51,7 @@ import numpy as np
 from . import hashes_np
 from . import signatures as sig
 from .sig_store import SigStore, fuse_key, split_key
+from ..obs import tracer as obs
 
 _I32_MAX = np.iinfo(np.int32).max
 _SENT = jnp.uint32(0xFFFFFFFF)
@@ -429,26 +430,29 @@ class DeviceSigStore:
         """
         qhi = jnp.asarray(qhi)
         qlo = jnp.asarray(qlo)
-        out, n_miss = _probe_step(
-            self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
-            jnp.int32(self.size))
+        with obs.span("store.probe_device", keys=count):
+            out, n_miss = _probe_step(
+                self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
+                jnp.int32(self.size))
         if int(n_miss) == 0:
             return np.asarray(out[:count]).astype(np.int64), next_pid
-        out, n_novel, sh, sl, minted, is_first = _resolve_step(
-            self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
-            jnp.int32(self.size), jnp.int32(next_pid))
-        n = int(n_novel)
-        if n:
-            if next_pid + n > _I32_MAX:
-                raise OverflowError(
-                    "device store pid space exceeded int32; rebuild to "
-                    "re-densify pids")
-            new_size = self.size + n
-            self.khi, self.klo, self.kpid = _merge_step(
-                self.khi, self.klo, self.kpid, sh, sl, minted, is_first,
-                jnp.int32(self.size), new_cap=bucket(new_size))
-            self.size = new_size
-            self._host = None  # mirrored back lazily on extraction
+        with obs.span("store.resolve_device", keys=count) as sp:
+            out, n_novel, sh, sl, minted, is_first = _resolve_step(
+                self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
+                jnp.int32(self.size), jnp.int32(next_pid))
+            n = int(n_novel)
+            sp.set(minted=n)
+            if n:
+                if next_pid + n > _I32_MAX:
+                    raise OverflowError(
+                        "device store pid space exceeded int32; rebuild to "
+                        "re-densify pids")
+                new_size = self.size + n
+                self.khi, self.klo, self.kpid = _merge_step(
+                    self.khi, self.klo, self.kpid, sh, sl, minted, is_first,
+                    jnp.int32(self.size), new_cap=bucket(new_size))
+                self.size = new_size
+                self._host = None  # mirrored back lazily on extraction
         return np.asarray(out[:count]).astype(np.int64), next_pid + n
 
     def get_or_assign_keys(self, keys, next_pid: int) -> tuple[np.ndarray,

@@ -52,6 +52,8 @@ import threading
 import time
 from typing import Callable, Optional
 
+from ..obs import tracer as obs
+
 MAX_RETRIES = 4
 BACKOFF_S = 0.002
 
@@ -91,9 +93,11 @@ class FaultPlan:
             self._count += 1
             idx = self._count
             self.log.append((idx, kind, path))
+            obs.event("fault.point", kind=kind, path=path, index=idx)
             if self.kinds is not None and kind not in self.kinds:
                 return None
             if self.crash_at is not None and idx == self.crash_at:
+                obs.event("fault.crash", kind=kind, path=path, index=idx)
                 raise InjectedCrash(
                     f"injected crash at fault point {idx} ({kind}: {path})")
             if self._transient_left.get(idx, 0) > 0:
@@ -102,10 +106,12 @@ class FaultPlan:
                 # the budget keyed by the original index so a retried op
                 # eventually succeeds
                 self._transient_left[idx + 1] = self._transient_left.pop(idx)
+                obs.event("fault.transient", kind=kind, path=path, index=idx)
                 raise TransientIOError(
                     f"injected transient I/O error at fault point {idx} "
                     f"({kind}: {path})")
             if self.torn_at is not None and idx == self.torn_at:
+                obs.event("fault.torn", kind=kind, path=path, index=idx)
                 return "torn"
         return None
 
@@ -151,5 +157,6 @@ def with_retries(fn: Callable, *, retries: int = MAX_RETRIES,
         try:
             return fn()
         except TransientIOError:
+            obs.event("fault.retry", attempt=attempt + 1)
             time.sleep(backoff_s * (2 ** attempt))
     return fn()

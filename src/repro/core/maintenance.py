@@ -80,6 +80,7 @@ from . import hashes_np
 from .faults import InjectedCrash, fault_point
 from .partition import BisimResult, bisim_step, build_bisim
 from .sig_store import SigStore, fuse_key, label_key
+from ..obs import tracer as obs
 
 
 @dataclasses.dataclass
@@ -97,6 +98,46 @@ class MaintenanceReport:
     rebuilt: bool = False
     level_seconds: list = dataclasses.field(default_factory=list)
     device: bool = False         # device propagation path taken
+
+    def as_dict(self) -> dict:
+        """Uniform stats surface (same contract as `IOStats.as_dict` /
+        `AioStats.as_dict`)."""
+        return {
+            "nodes_checked": [int(x) for x in self.nodes_checked],
+            "nodes_changed": [int(x) for x in self.nodes_changed],
+            "partitions_touched": [int(x) for x in
+                                   self.partitions_touched],
+            "rebuilt": bool(self.rebuilt),
+            "level_seconds": [float(x) for x in self.level_seconds],
+            "device": bool(self.device),
+        }
+
+    def merge(self, other) -> "MaintenanceReport":
+        """Fold another report (or its `as_dict()`) into this one, in
+        place: per-level lists add elementwise (padded to the longer k),
+        `rebuilt` ORs, `device` ANDs (True only if every merged update
+        ran on device)."""
+        d = other.as_dict() if hasattr(other, "as_dict") else dict(other)
+
+        def _add(mine: list, theirs: list) -> list:
+            out = [0] * max(len(mine), len(theirs))
+            for i, v in enumerate(mine):
+                out[i] += v
+            for i, v in enumerate(theirs):
+                out[i] += v
+            return out
+
+        self.nodes_checked = _add(self.nodes_checked,
+                                  d.get("nodes_checked", []))
+        self.nodes_changed = _add(self.nodes_changed,
+                                  d.get("nodes_changed", []))
+        self.partitions_touched = _add(self.partitions_touched,
+                                       d.get("partitions_touched", []))
+        self.level_seconds = _add(self.level_seconds,
+                                  d.get("level_seconds", []))
+        self.rebuilt = bool(self.rebuilt or d.get("rebuilt", False))
+        self.device = bool(self.device and d.get("device", False))
+        return self
 
 
 # the CSR frontier gather is shared with the batch signature path
@@ -788,6 +829,11 @@ class BisimMaintainer:
         return report
 
     def _propagate(self, frontier0: np.ndarray) -> MaintenanceReport:
+        with obs.span("maint.propagate", frontier=int(frontier0.size),
+                      device=self.device):
+            return self._propagate_inner(frontier0)
+
+    def _propagate_inner(self, frontier0: np.ndarray) -> MaintenanceReport:
         n = self.backend.num_nodes
         report = MaintenanceReport([], [], [], device=self.device)
         dedup = self.mode != "multiset"
@@ -803,45 +849,51 @@ class BisimMaintainer:
                 continue
             if frontier.size > self.rebuild_threshold * n:
                 # §4.2 heuristic: most nodes queued -> full rebuild is cheaper
-                self.backend.build(self.k, self.mode)
+                with obs.span("maint.rebuild", level=j):
+                    self.backend.build(self.k, self.mode)
                 report.rebuilt = True
                 return self._pad_report(report)
-            pj = None
-            if self.device:
-                try:
-                    fault_point("device", f"level {j}")
-                    pj = self.backend.propagate_level_device(
-                        j, frontier, dedup=dedup)
-                except InjectedCrash:
-                    raise  # a simulated process death is not degradable
-                except Exception as exc:
-                    # graceful degradation: the host path computes the
-                    # bit-identical partition, so a flaky device demotes
-                    # the stream instead of killing it; the flip is
-                    # permanent for this maintainer (no retry storms)
-                    warnings.warn(
-                        f"device propagation failed ({exc!r}); degrading "
-                        "to the bit-identical host path", RuntimeWarning)
-                    self.device = False
-            if pj is None:
-                hi, lo = self.backend.frontier_signatures(j, frontier,
-                                                          dedup=dedup)
-                # one bulk resolve of the whole frontier against S_j
-                pj = self.backend.resolve(j, fuse_key(hi, lo))
-            old = self.backend.pid_at(j, frontier)
-            changed_mask = old != pj
-            self.backend.set_pid_at(j, frontier, pj)
-            changed = frontier[changed_mask]
-            report.nodes_checked.append(int(frontier.size))
-            report.nodes_changed.append(int(changed.size))
-            report.partitions_touched.append(
-                int(np.union1d(old[changed_mask], pj[changed_mask]).size))
-            # propagate to parents of changed nodes (line 20; uses E_tts)
-            if changed.size and j < self.k:
-                frontier = np.union1d(self.backend.parents_of(changed),
-                                      always)
-            else:
-                frontier = always.copy()
+            with obs.span("maint.level", level=j,
+                          frontier=int(frontier.size),
+                          device=self.device) as lvl_sp:
+                pj = None
+                if self.device:
+                    try:
+                        fault_point("device", f"level {j}")
+                        pj = self.backend.propagate_level_device(
+                            j, frontier, dedup=dedup)
+                    except InjectedCrash:
+                        raise  # a simulated process death is not degradable
+                    except Exception as exc:
+                        # graceful degradation: the host path computes the
+                        # bit-identical partition, so a flaky device demotes
+                        # the stream instead of killing it; the flip is
+                        # permanent for this maintainer (no retry storms)
+                        warnings.warn(
+                            f"device propagation failed ({exc!r}); degrading "
+                            "to the bit-identical host path", RuntimeWarning)
+                        self.device = False
+                if pj is None:
+                    hi, lo = self.backend.frontier_signatures(j, frontier,
+                                                              dedup=dedup)
+                    # one bulk resolve of the whole frontier against S_j
+                    pj = self.backend.resolve(j, fuse_key(hi, lo))
+                old = self.backend.pid_at(j, frontier)
+                changed_mask = old != pj
+                self.backend.set_pid_at(j, frontier, pj)
+                changed = frontier[changed_mask]
+                lvl_sp.set(changed=int(changed.size))
+                report.nodes_checked.append(int(frontier.size))
+                report.nodes_changed.append(int(changed.size))
+                report.partitions_touched.append(
+                    int(np.union1d(old[changed_mask],
+                                   pj[changed_mask]).size))
+                # propagate to parents of changed nodes (line 20; E_tts)
+                if changed.size and j < self.k:
+                    frontier = np.union1d(self.backend.parents_of(changed),
+                                          always)
+                else:
+                    frontier = always.copy()
             report.level_seconds.append(time.perf_counter() - t0)
         return report
 

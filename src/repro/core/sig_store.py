@@ -33,6 +33,7 @@ import numpy as np
 
 from .integrity import ChecksumError, crc32_array, crc32_update
 from .kway import merge_sorted_sources
+from ..obs import tracer as obs
 
 _U64 = np.uint64
 _SHIFT = np.uint64(32)
@@ -292,19 +293,21 @@ class SpillableSigStore(SigStore):
 
     def lookup(self, keys) -> tuple[np.ndarray, np.ndarray]:
         keys = np.asarray(keys, dtype=_U64)
-        out, found = super().lookup(keys)
-        for kp, pp, ln in self._runs:
-            if found.all():
-                break
-            rk = self._mmap(kp)
-            miss = np.flatnonzero(~found)
-            idx = np.searchsorted(rk, keys[miss])
-            idx_c = np.minimum(idx, ln - 1)
-            hit = np.asarray(rk[idx_c]) == keys[miss]
-            if hit.any():
-                rp = self._mmap(pp)
-                out[miss[hit]] = rp[idx_c[hit]]
-                found[miss[hit]] = True
+        with obs.span("store.probe", keys=int(keys.shape[0]),
+                      runs=len(self._runs)):
+            out, found = super().lookup(keys)
+            for kp, pp, ln in self._runs:
+                if found.all():
+                    break
+                rk = self._mmap(kp)
+                miss = np.flatnonzero(~found)
+                idx = np.searchsorted(rk, keys[miss])
+                idx_c = np.minimum(idx, ln - 1)
+                hit = np.asarray(rk[idx_c]) == keys[miss]
+                if hit.any():
+                    rp = self._mmap(pp)
+                    out[miss[hit]] = rp[idx_c[hit]]
+                    found[miss[hit]] = True
         return out, found
 
     # ------------------------------------------------------------- updates
@@ -313,8 +316,11 @@ class SpillableSigStore(SigStore):
         self._maybe_spill()
 
     def get_or_assign(self, keys, next_pid: int) -> tuple[np.ndarray, int]:
-        out, nxt = super().get_or_assign(keys, next_pid)
-        self._maybe_spill()
+        with obs.span("store.resolve") as sp:
+            out, nxt = super().get_or_assign(keys, next_pid)
+            sp.set(keys=int(np.asarray(keys).shape[0]),
+                   minted=int(nxt - next_pid))
+            self._maybe_spill()
         return out, nxt
 
     # ------------------------------------------------------------ spilling
@@ -328,6 +334,10 @@ class SpillableSigStore(SigStore):
         n = int(self.keys.shape[0])
         if n == 0:
             return
+        with obs.span("store.spill", rows=n, runs=len(self._runs)):
+            self._spill_inner(n)
+
+    def _spill_inner(self, n: int) -> None:
         kp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.keys.npy")
         pp = os.path.join(self.spill_dir, f"run_{self._run_seq:06d}.pids.npy")
         # checksums from the arrays still in hand, before the save
@@ -368,6 +378,11 @@ class SpillableSigStore(SigStore):
         files (not structured records) so `np.searchsorted` probes touch
         O(log) pages instead of copying a strided column.
         """
+        with obs.span("store.merge", fan_in=self.max_runs,
+                      runs=len(self._runs)):
+            self._merge_runs_inner(budget_rows)
+
+    def _merge_runs_inner(self, budget_rows: int) -> None:
         from numpy.lib.format import open_memmap
         by_size = sorted(self._runs, key=lambda r: r[2])
         victims = by_size[:self.max_runs]

@@ -122,6 +122,39 @@ input, not an exception path.  The subsystem's guarantees:
     filesystem's; uncommitted WAL tail records are dropped (by design);
     the manifest protects artifact *files*, not the free-form workdir
     scratch, which recovery deletes.
+
+Observability
+-------------
+Every phase of the subsystem is traced through `repro.obs` — the
+zero-dependency tracer whose spans follow the ``layer.phase`` naming
+convention (see `repro.obs` for the full taxonomy):
+
+  build.*   per-level pipeline phases of `build_bisim_oocore`
+            (``build.level`` / ``build.join`` / ``build.fold`` /
+            ``build.rank`` / ``build.pid_write``, each carrying a
+            ``level=j`` attribute);
+  sort.*    `runs.external_sort` run formation and merge passes
+            (``obs_attrs={"level": j}`` threads the level through);
+  store.*   `SpillableSigStore` probe/resolve/spill/merge (and the
+            ``store.*_device`` variants from `core.device_maint`);
+  table.*   `OocGraph` chunk scans (on the aio reader lane when
+            prefetch is on) and table rewrites;
+  aio.*     pipeline internals — reader/writer thread work plus
+            ``aio.wait_read`` / ``aio.wait_write`` consumer stalls, so
+            a trace shows exactly where overlap is won or lost;
+  wal.*     WAL append/commit (fsync-round latency), replay,
+            snapshot and restore;
+  maint.*   `BisimMaintainer` propagation (``maint.propagate`` /
+            ``maint.level`` / ``maint.rebuild``);
+  fault.*   instant events from `core.faults` fault points + retries.
+
+Tracing is OFF by default and contract-neutral: with no tracer
+installed each span is a single branch (`obs.NOOP_SPAN`), and enabling
+it changes neither partitions nor `IOStats` — asserted by
+``tests/test_obs.py``.  Spans carrying ``io=stats`` attach the IOStats
+delta accrued inside them as ``io.<field>`` attributes.  The launcher's
+``--trace PATH`` writes the Chrome-trace/Perfetto JSON and prints the
+aggregated per-phase / per-level `MetricsReport` table.
 """
 from .aio import (AioConfig, AioStats, BoundedSaver, Pipeline,
                   PrefetchReader, ReadaheadArray, StreamingWriter)

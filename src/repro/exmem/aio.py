@@ -78,6 +78,7 @@ import numpy as np
 from numpy.lib.format import open_memmap
 
 from repro.core.faults import InjectedCrash, fault_point, with_retries
+from repro.obs import tracer as obs
 
 _SENTINEL = object()
 READER_THREAD_PREFIX = "exmem-aio-reader"
@@ -171,6 +172,23 @@ class AioStats:
             "bytes_written": self.bytes_written,
         }
 
+    def as_dict(self) -> dict:
+        """Uniform stats surface (same contract as `IOStats.as_dict` /
+        `MaintenanceReport.as_dict`)."""
+        return self.to_dict()
+
+    def merge(self, other) -> "AioStats":
+        """Fold another AioStats (or its `as_dict()`) into this one, in
+        place: waits and chunk counts add."""
+        d = other.as_dict() if hasattr(other, "as_dict") else dict(other)
+        with self._lock:
+            self.read_wait_s += float(d.get("read_wait_s", 0.0))
+            self.write_wait_s += float(d.get("write_wait_s", 0.0))
+            self.chunks_prefetched += int(d.get("chunks_prefetched", 0))
+            self.chunks_written += int(d.get("chunks_written", 0))
+            self.bytes_written += int(d.get("bytes_written", 0))
+        return self
+
 
 class _Raise:
     __slots__ = ("exc",)
@@ -211,10 +229,17 @@ class PrefetchReader:
     def _pump(self) -> None:
         try:
             try:
-                for item in self._src:
+                while True:
+                    # one span per produced chunk, on this reader thread's
+                    # trace lane — upstream generator compute (table scans,
+                    # sort merges) nests underneath it
+                    with obs.span("aio.read_chunk"):
+                        item = next(self._src, _SENTINEL)
+                    if item is _SENTINEL:
+                        self._put(_SENTINEL)
+                        return
                     if not self._put(item):
                         return
-                self._put(_SENTINEL)
             except BaseException as exc:  # re-raised at the consumer
                 self._put(_Raise(exc))
         finally:
@@ -232,7 +257,8 @@ class PrefetchReader:
         if self._thread is None:
             raise StopIteration
         t0 = time.perf_counter()
-        item = self._q.get()
+        with obs.span("aio.wait_read"):
+            item = self._q.get()
         if self._stats is not None:
             self._stats.add_read_wait(time.perf_counter() - t0)
         if item is _SENTINEL:
@@ -335,7 +361,9 @@ class StreamingWriter:
                 return
             if self._exc is None:
                 try:
-                    self._append(item)
+                    with obs.span("aio.write_chunk",
+                                  file=os.path.basename(self.path)):
+                        self._append(item)
                 except BaseException as exc:
                     self._exc = exc  # keep draining so writers never block
 
@@ -352,7 +380,8 @@ class StreamingWriter:
             self._append(arr)
             return
         t0 = time.perf_counter()
-        self._q.put(arr)
+        with obs.span("aio.wait_write"):
+            self._q.put(arr)
         if self._stats is not None:
             self._stats.add_write_wait(time.perf_counter() - t0)
 
@@ -421,6 +450,15 @@ class StreamingWriter:
                 self.abort()
         except BaseException:
             pass
+
+
+def _traced(fn: Callable, label: str) -> Callable:
+    """Wrap an executor task in a span (only built while tracing is on,
+    so the untraced submit path is unchanged)."""
+    def run():
+        with obs.span(label):
+            return fn()
+    return run
 
 
 class _Done:
@@ -493,7 +531,8 @@ class ReadaheadArray:
         hi = min(lo + self._win_rows, n)
         arr = self._arr
         self._next = (lo, hi, self._aio.submit(
-            lambda a=arr, s=lo, e=hi: np.array(a[s:e])))
+            lambda a=arr, s=lo, e=hi: np.array(a[s:e]),
+            label="aio.readahead"))
 
     def _block(self, start: int, stop: int) -> np.ndarray:
         if self._win_rows is None:
@@ -587,12 +626,14 @@ class AioConfig:
                                threaded=self.enabled, stats=self.stats,
                                fsync=fsync)
 
-    def submit(self, fn: Callable):
+    def submit(self, fn: Callable, label: str = "aio.task"):
         """Run ``fn`` on the shared executor; returns a Future-alike.
         Runs synchronously when the pipeline is off — or after
         ``close()``, so late users of a retired config (kept stores
         resolving new signatures after their build) degrade gracefully
         instead of resurrecting an executor nobody will shut down."""
+        if obs.current_tracer() is not None:
+            fn = _traced(fn, label)  # pool-lane span per task
         if self.enabled:
             with self._lock:
                 if self._executor is None and not self._closed:
@@ -612,7 +653,8 @@ class AioConfig:
                    fsync: bool = False):
         """Atomic-rename `np.save` on the executor (sync when disabled).
         Defaults to no fsync: the async saves are scratch runs/chunks."""
-        return self.submit(lambda: atomic_save(path, arr, fsync=fsync))
+        return self.submit(lambda: atomic_save(path, arr, fsync=fsync),
+                           label="aio.save")
 
     def saver(self) -> "BoundedSaver":
         """A `BoundedSaver` over this config (see there)."""

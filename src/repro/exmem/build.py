@@ -61,6 +61,7 @@ from repro.core.integrity import verify_npy
 from repro.core.partition import IterationStats
 from repro.core.sig_store import SpillableSigStore, fuse_key, label_key
 from repro.graph.storage import Graph
+from repro.obs import tracer as obs
 
 from . import aio as aio_mod
 from . import runs as runs_mod
@@ -136,7 +137,7 @@ def _fold_chunk(elabel, pid_tgt, seg, keep, *, num_segments: int,
 
 
 def _joined_chunks(ooc: OocGraph, pid_mm: np.ndarray, window_rows: int,
-                   io: IOStats) -> Iterator[np.ndarray]:
+                   io: IOStats, level: int = 0) -> Iterator[np.ndarray]:
     """Stage 1: E_tts ⋈ pId_{j-1} as a sequential merge join.
 
     Both inputs are sorted by target/node id, so the pid file advances
@@ -151,16 +152,19 @@ def _joined_chunks(ooc: OocGraph, pid_mm: np.ndarray, window_rows: int,
             dst = chunk["dst"].astype(np.int64)
             pos = 0
             while pos < dst.shape[0]:
-                d0 = int(dst[pos])
-                cut = int(np.searchsorted(dst, d0 + window_rows,
-                                          side="left"))
-                window = np.asarray(pid_mm[d0:d0 + window_rows])
-                part = slice(pos, cut)
-                rec = np.empty(cut - pos, _JOIN_DTYPE)
-                rec["src"] = chunk["src"][part]
-                rec["elabel"] = chunk["elabel"][part]
-                rec["pid"] = window[dst[part] - d0]
-                pos = cut
+                # span per emitted join sliver, closed before the yield
+                with obs.span("build.join", level=level) as sp:
+                    d0 = int(dst[pos])
+                    cut = int(np.searchsorted(dst, d0 + window_rows,
+                                              side="left"))
+                    window = np.asarray(pid_mm[d0:d0 + window_rows])
+                    part = slice(pos, cut)
+                    rec = np.empty(cut - pos, _JOIN_DTYPE)
+                    rec["src"] = chunk["src"][part]
+                    rec["elabel"] = chunk["elabel"][part]
+                    rec["pid"] = window[dst[part] - d0]
+                    pos = cut
+                    sp.set(rows=int(rec.shape[0]))
                 yield rec
     finally:
         # the scan may be a prefetched generator: close it promptly so an
@@ -169,7 +173,8 @@ def _joined_chunks(ooc: OocGraph, pid_mm: np.ndarray, window_rows: int,
 
 
 def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
-                        dedup: bool, use_kernel: bool = False):
+                        dedup: bool, use_kernel: bool = False,
+                        level: int = 0):
     """Stage 3: consume (src, elabel, pid)-sorted chunks; yield
     (src_unique, hi_partial, lo_partial) per chunk, sorted by src.
 
@@ -194,30 +199,35 @@ def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
         n = src.shape[0]
         if n == 0:
             continue
-        keep = np.ones(n, dtype=bool)
-        if dedup:
-            keep[1:] = ((src[1:] != src[:-1]) | (lab[1:] != lab[:-1])
-                        | (pid[1:] != pid[:-1]))
-            if prev_last is not None:
-                keep[0] = (int(src[0]), int(lab[0]),
-                           int(pid[0])) != prev_last
-        prev_last = (int(src[-1]), int(lab[-1]), int(pid[-1]))
-        new_src = np.ones(n, dtype=bool)
-        new_src[1:] = src[1:] != src[:-1]
-        seg = np.cumsum(new_src, dtype=np.int32) - np.int32(1)
-        src_u = src[new_src].astype(np.int64)
-        pad = chunk_edges - n
-        if pad:
-            lab = np.concatenate([lab, np.zeros(pad, np.int32)])
-            pid = np.concatenate([pid, np.zeros(pad, np.int32)])
-            seg = np.concatenate(
-                [seg, np.full(pad, chunk_edges - 1, np.int32)])
-            keep = np.concatenate([keep, np.zeros(pad, bool)])
-        hi, lo = _fold_chunk(lab, pid, seg, keep,
-                             num_segments=chunk_edges,
-                             use_kernel=use_kernel)
-        u = src_u.shape[0]
-        yield src_u, np.asarray(hi)[:u], np.asarray(lo)[:u]
+        # the per-chunk device-fold span (the p50/p99 the MetricsReport
+        # quotes); closed before the yield
+        with obs.span("build.fold", level=level, rows=int(n)):
+            keep = np.ones(n, dtype=bool)
+            if dedup:
+                keep[1:] = ((src[1:] != src[:-1]) | (lab[1:] != lab[:-1])
+                            | (pid[1:] != pid[:-1]))
+                if prev_last is not None:
+                    keep[0] = (int(src[0]), int(lab[0]),
+                               int(pid[0])) != prev_last
+            prev_last = (int(src[-1]), int(lab[-1]), int(pid[-1]))
+            new_src = np.ones(n, dtype=bool)
+            new_src[1:] = src[1:] != src[:-1]
+            seg = np.cumsum(new_src, dtype=np.int32) - np.int32(1)
+            src_u = src[new_src].astype(np.int64)
+            pad = chunk_edges - n
+            if pad:
+                lab = np.concatenate([lab, np.zeros(pad, np.int32)])
+                pid = np.concatenate([pid, np.zeros(pad, np.int32)])
+                seg = np.concatenate(
+                    [seg, np.full(pad, chunk_edges - 1, np.int32)])
+                keep = np.concatenate([keep, np.zeros(pad, bool)])
+            hi, lo = _fold_chunk(lab, pid, seg, keep,
+                                 num_segments=chunk_edges,
+                                 use_kernel=use_kernel)
+            u = src_u.shape[0]
+            hi_u = np.asarray(hi)[:u]
+            lo_u = np.asarray(lo)[:u]
+        yield src_u, hi_u, lo_u
 
 
 def build_bisim_oocore(graph: Union[Graph, OocGraph], k: int, *,
@@ -456,11 +466,15 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
         it_dir = os.path.join(workdir, "it000")
         store = _new_store(it_dir, 0)
         next_pid = 0
-        with aio.writer(_pid_path(0), np.int32, n) as pid_w:
+        with obs.span("build.level", level=0, io=io), \
+                aio.writer(_pid_path(0), np.int32, n) as pid_w:
             for base, labels in ooc.iter_nodes(io):
-                pids_chunk, next_pid = store.get_or_assign(
-                    label_key(labels), next_pid)
-                pid_w.write(pids_chunk.astype(np.int32))
+                with obs.span("build.rank", level=0,
+                              rows=int(labels.shape[0])):
+                    pids_chunk, next_pid = store.get_or_assign(
+                        label_key(labels), next_pid)
+                with obs.span("build.pid_write", level=0):
+                    pid_w.write(pids_chunk.astype(np.int32))
                 io.count_sort(labels.shape[0], labels.shape[0] * 4)  # rank
         pid_sums["pid_000.npy"] = [n, pid_w.checksum]
         _retire_store(store)
@@ -506,31 +520,36 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
         def _finalize_window(base: int) -> int:
             nonlocal next_pid
             end = min(base + c_nodes, n)
-            p0 = np.asarray(pid0_mm[base:end])
-            io.count_scan(end - base, (end - base) * 4)  # pId_0 scan
-            hi, lo = hashes_np.hash_triple(acc_hi[:end - base],
-                                           acc_lo[:end - base], p0)
-            keys = fuse_key(hi, lo)
-            pids_chunk, next_pid = store.get_or_assign(keys, next_pid)
-            pid_w.write(pids_chunk.astype(np.int32))
+            with obs.span("build.rank", level=j, rows=end - base):
+                p0 = np.asarray(pid0_mm[base:end])
+                io.count_scan(end - base, (end - base) * 4)  # pId_0 scan
+                hi, lo = hashes_np.hash_triple(acc_hi[:end - base],
+                                               acc_lo[:end - base], p0)
+                keys = fuse_key(hi, lo)
+                pids_chunk, next_pid = store.get_or_assign(keys, next_pid)
+            with obs.span("build.pid_write", level=j):
+                pid_w.write(pids_chunk.astype(np.int32))
             io.count_sort(end - base, (end - base) * 8)  # ranking via S
             acc_hi.fill(0)
             acc_lo.fill(0)
             return end
 
         try:
-            with contextlib.ExitStack() as stack:
+            with obs.span("build.level", level=j, io=io), \
+                    contextlib.ExitStack() as stack:
                 joined = stack.enter_context(contextlib.closing(
-                    _joined_chunks(ooc, pid_prev_mm, c_nodes, io)))
+                    _joined_chunks(ooc, pid_prev_mm, c_nodes, io,
+                                   level=j)))
                 sorted_stream = stack.enter_context(contextlib.closing(
                     aio.prefetch(runs_mod.external_sort(
                         runs_mod.rebuffer(joined, c_edges), _JOIN_KEYS,
                         os.path.join(it_dir, "sort"), budget_rows=c_edges,
-                        stats=io, aio=aio))))
+                        stats=io, aio=aio, obs_attrs={"level": j}))))
                 io.count_scan(n, n * 4)  # the pid_{j-1} scan of the join
                 for src_u, hi_u, lo_u in _fold_sorted_stream(sorted_stream,
                                                              c_edges, dedup,
-                                                             use_kernel):
+                                                             use_kernel,
+                                                             level=j):
                     i = 0
                     while i < src_u.shape[0]:
                         wend = node_base + c_nodes
@@ -551,7 +570,7 @@ def _build_oocore_inner(ooc: OocGraph, k: int, *, mode: str, dedup: bool,
                 while node_base < n:
                     _finalize_window(node_base)
                     node_base += c_nodes
-            pid_w.close()
+                pid_w.close()
         except BaseException:
             pid_w.abort()
             # the incomplete level's store is scratch: discard its spill

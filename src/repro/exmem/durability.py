@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.faults import fault_point, with_retries
 from repro.core.integrity import (ChecksumError, crc32_array, crc32_bytes,
                                   verify_npy)
+from repro.obs import tracer as obs
 
 from . import aio as aio_mod
 
@@ -243,17 +244,19 @@ class WriteAheadLog:
         file is fully written here (no fsync yet); durability arrives at
         the next `commit`."""
         lsn = self.last_lsn + 1
-        payload = _encode_record(op, arrays)
-        path = self._rec_path(lsn)
-        writer = aio_mod.StreamingWriter(path, np.uint8, payload.shape[0],
-                                         threaded=False, fsync=False)
-        try:
-            fault_point("wal_append", path)
-            writer.write(payload)
-        except BaseException:
-            writer.abort()
-            raise
-        writer.close()
+        with obs.span("wal.append", op=op, lsn=lsn):
+            payload = _encode_record(op, arrays)
+            path = self._rec_path(lsn)
+            writer = aio_mod.StreamingWriter(path, np.uint8,
+                                             payload.shape[0],
+                                             threaded=False, fsync=False)
+            try:
+                fault_point("wal_append", path)
+                writer.write(payload)
+            except BaseException:
+                writer.abort()
+                raise
+            writer.close()
         self.last_lsn = lsn
         self._pending.append((lsn, path, writer.checksum,
                               int(payload.shape[0])))
@@ -268,17 +271,19 @@ class WriteAheadLog:
         if not self._pending:
             return
         pending, self._pending = self._pending, []
-        for _, path, _, _ in pending:
-            fault_point("wal_commit", path)
-            with open(path, "rb") as f:
+        with obs.span("wal.commit", records=len(pending),
+                      lsn=pending[-1][0]):
+            for _, path, _, _ in pending:
+                fault_point("wal_commit", path)
+                with open(path, "rb") as f:
+                    os.fsync(f.fileno())
+            log = os.path.join(self.root, "commits.log")
+            with open(log, "a") as f:
+                for lsn, _, crc, nbytes in pending:
+                    f.write(f"{lsn} {crc} {nbytes}\n")
+                f.flush()
                 os.fsync(f.fileno())
-        log = os.path.join(self.root, "commits.log")
-        with open(log, "a") as f:
-            for lsn, _, crc, nbytes in pending:
-                f.write(f"{lsn} {crc} {nbytes}\n")
-            f.flush()
-            os.fsync(f.fileno())
-        aio_mod.fsync_dir(self.root)
+            aio_mod.fsync_dir(self.root)
         self.committed_lsn = pending[-1][0]
 
     flush = commit
@@ -306,9 +311,10 @@ class WriteAheadLog:
         for lsn, crc, nbytes in self._committed_lines():
             if lsn <= after_lsn:
                 continue
-            payload = verify_npy(self._rec_path(lsn), crc,
-                                 expected_rows=nbytes)
-            op, arrays = _decode_record(payload)
+            with obs.span("wal.replay", lsn=lsn, bytes=nbytes):
+                payload = verify_npy(self._rec_path(lsn), crc,
+                                     expected_rows=nbytes)
+                op, arrays = _decode_record(payload)
             yield lsn, op, arrays
 
     # ------------------------------------------------------------ truncate

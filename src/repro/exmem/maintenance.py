@@ -65,6 +65,7 @@ from repro.core.integrity import ChecksumError
 from repro.core.maintenance import MaintenanceBackend
 from repro.core.sig_store import SpillableSigStore
 from repro.graph.storage import Graph
+from repro.obs import tracer as obs
 
 from .aio import AioConfig, Pipeline, atomic_save
 from .build import build_bisim_oocore
@@ -221,6 +222,11 @@ class OocBackend(MaintenanceBackend):
         snapshot overwrites, never a half-snapshot that verifies."""
         if self.stores is None:
             raise RuntimeError("snapshot() before build()")
+        with obs.span("wal.snapshot", levels=len(self.pid_paths),
+                      io=self.io):
+            self._snapshot_inner(state)
+
+    def _snapshot_inner(self, state: dict) -> None:
         tmp = os.path.join(self.workdir, "snapshot.aio-tmpdir")
         live = os.path.join(self.workdir, "snapshot")
         shutil.rmtree(tmp, ignore_errors=True)
@@ -289,6 +295,13 @@ class OocBackend(MaintenanceBackend):
         discarded: recovery is snapshot + committed WAL redo, nothing
         else.  Returns ``(backend, state)`` for
         `BisimMaintainer.restore`, which performs the WAL replay."""
+        with obs.span("wal.restore", workdir=os.path.basename(workdir)):
+            return cls._restore_inner(workdir, io_threads=io_threads,
+                                      prefetch_depth=prefetch_depth)
+
+    @classmethod
+    def _restore_inner(cls, workdir: str, *, io_threads: int,
+                       prefetch_depth: int) -> Tuple["OocBackend", dict]:
         snap = os.path.join(workdir, "snapshot")
         if not os.path.isdir(snap):
             raise ChecksumError(f"no committed snapshot under {workdir!r}")

@@ -40,6 +40,7 @@ from typing import Iterable, Iterator, Optional, Sequence
 import numpy as np
 
 from repro.core.kway import merge_sorted_sources
+from repro.obs import tracer as obs
 
 from . import aio as aio_mod
 
@@ -85,6 +86,21 @@ class IOStats:
     def to_dict(self) -> dict:
         return {f.name: getattr(self, f.name)
                 for f in dataclasses.fields(self)}
+
+    def as_dict(self) -> dict:
+        """Uniform stats surface (same contract as `AioStats.as_dict` /
+        `MaintenanceReport.as_dict`)."""
+        return self.to_dict()
+
+    def merge(self, other) -> "IOStats":
+        """Fold another IOStats (or its `as_dict()`) into this one, in
+        place: every counter adds."""
+        d = other.as_dict() if hasattr(other, "as_dict") else dict(other)
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name,
+                        getattr(self, f.name) + int(d.get(f.name, 0)))
+        return self
 
     def restore(self, d: dict) -> None:
         """Reset every counter to a checkpointed `to_dict` snapshot, so a
@@ -143,7 +159,8 @@ def rebuffer(chunks: Iterable[np.ndarray], rows: int) -> Iterator[np.ndarray]:
 def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
                  tmpdir: str, *, stats: Optional[IOStats] = None,
                  prefix: str = "run",
-                 aio: "Optional[aio_mod.AioConfig]" = None) -> list:
+                 aio: "Optional[aio_mod.AioConfig]" = None,
+                 obs_attrs: Optional[dict] = None) -> list:
     """Run-formation pass: lexsort each chunk in memory, write one `.npy`
     run per chunk. Returns the run paths (empty chunks are dropped).
 
@@ -159,9 +176,11 @@ def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
         for i, chunk in enumerate(chunks):
             if chunk.shape[0] == 0:
                 continue
-            rec = lexsort_records(chunk, keys)
-            path = os.path.join(tmpdir, f"{prefix}_{i:06d}.npy")
-            saver.save(path, rec)
+            with obs.span("sort.run_formation", **(obs_attrs or {})) as sp:
+                rec = lexsort_records(chunk, keys)
+                path = os.path.join(tmpdir, f"{prefix}_{i:06d}.npy")
+                saver.save(path, rec)
+                sp.set(rows=int(rec.shape[0]))
             paths.append(path)
             if stats is not None:
                 stats.count_sort(rec.shape[0], rec.nbytes)
@@ -174,7 +193,8 @@ def sort_to_runs(chunks: Iterable[np.ndarray], keys: Sequence[str],
 def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
                budget_rows: int = 1 << 16,
                stats: Optional[IOStats] = None,
-               aio: "Optional[aio_mod.AioConfig]" = None
+               aio: "Optional[aio_mod.AioConfig]" = None,
+               obs_attrs: Optional[dict] = None
                ) -> Iterator[np.ndarray]:
     """Bounded-memory k-way merge of sorted runs; yields sorted chunks of at
     most ``budget_rows`` records. Total resident memory is one block of
@@ -203,10 +223,19 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
         return
     if aio is not None and aio.enabled:
         arrs = [aio.readahead(a) for a in arrs]
+    obs.event("sort.merge_pass", runs=len(arrs), **(obs_attrs or {}))
     sources = [tuple(a[k] for k in keys) + (a,) for a in arrs]
-    for cols in merge_sorted_sources(sources, num_key_cols=len(keys),
-                                     budget_rows=budget_rows):
-        out = cols[-1]
+    it = merge_sorted_sources(sources, num_key_cols=len(keys),
+                              budget_rows=budget_rows)
+    while True:
+        # span per merged chunk, closed before the yield (spans must not
+        # stay open across a generator suspension)
+        with obs.span("sort.merge_chunk", **(obs_attrs or {})) as sp:
+            cols = next(it, None)
+            if cols is None:
+                break
+            out = cols[-1]
+            sp.set(rows=int(out.shape[0]))
         if stats is not None:
             stats.count_sort(out.shape[0], out.nbytes)
         yield out
@@ -214,7 +243,8 @@ def merge_runs(paths: Sequence[str], keys: Sequence[str], *,
 
 def _merge_to_file(paths: Sequence[str], keys: Sequence[str], out_path: str,
                    *, budget_rows: int, stats: Optional[IOStats],
-                   aio: "Optional[aio_mod.AioConfig]" = None) -> str:
+                   aio: "Optional[aio_mod.AioConfig]" = None,
+                   obs_attrs: Optional[dict] = None) -> str:
     """Collapse several runs into one: the readahead merge feeds a
     `StreamingWriter` through a `Pipeline` — reads, merge compute, and
     the output write all overlap (when ``aio`` is enabled)."""
@@ -226,11 +256,13 @@ def _merge_to_file(paths: Sequence[str], keys: Sequence[str], out_path: str,
               if aio is not None
               else aio_mod.StreamingWriter(out_path, dtype, total,
                                            threaded=False, fsync=False))
-    with writer:
-        aio_mod.Pipeline(
-            merge_runs(paths, keys, budget_rows=budget_rows, stats=stats,
-                       aio=aio),
-            writer=writer).run()
+    with obs.span("sort.merge_to_file", fan_in=len(paths), rows=total,
+                  **(obs_attrs or {})):
+        with writer:
+            aio_mod.Pipeline(
+                merge_runs(paths, keys, budget_rows=budget_rows, stats=stats,
+                           aio=aio, obs_attrs=obs_attrs),
+                writer=writer).run()
     for p in paths:
         os.remove(p)
     if stats is not None:
@@ -241,14 +273,18 @@ def _merge_to_file(paths: Sequence[str], keys: Sequence[str], out_path: str,
 def external_sort(chunks: Iterable[np.ndarray], keys: Sequence[str],
                   tmpdir: str, *, budget_rows: int = 1 << 16,
                   fan_in: int = 16, stats: Optional[IOStats] = None,
-                  aio: "Optional[aio_mod.AioConfig]" = None
+                  aio: "Optional[aio_mod.AioConfig]" = None,
+                  obs_attrs: Optional[dict] = None
                   ) -> Iterator[np.ndarray]:
     """Full external sort: run formation, intermediate merge passes while
     the fan-in exceeds ``fan_in``, then the final streaming merge.  The
     optional ``aio`` pipeline threads every pass (async run saves,
     readahead merge inputs, streamed intermediate writes) without
-    changing a single byte of any run or the `IOStats` accounting."""
-    paths = sort_to_runs(chunks, keys, tmpdir, stats=stats, aio=aio)
+    changing a single byte of any run or the `IOStats` accounting.
+    ``obs_attrs`` (e.g. ``{"level": j}``) rides on every span this sort
+    emits, so phases aggregate per level."""
+    paths = sort_to_runs(chunks, keys, tmpdir, stats=stats, aio=aio,
+                         obs_attrs=obs_attrs)
     level = 0
     while len(paths) > fan_in:
         merged = []
@@ -257,8 +293,9 @@ def external_sort(chunks: Iterable[np.ndarray], keys: Sequence[str],
             out = os.path.join(tmpdir, f"merge_{level}_{gi:06d}.npy")
             merged.append(_merge_to_file(group, keys, out,
                                          budget_rows=budget_rows,
-                                         stats=stats, aio=aio))
+                                         stats=stats, aio=aio,
+                                         obs_attrs=obs_attrs))
         paths = merged
         level += 1
     yield from merge_runs(paths, keys, budget_rows=budget_rows, stats=stats,
-                          aio=aio)
+                          aio=aio, obs_attrs=obs_attrs)

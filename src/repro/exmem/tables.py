@@ -49,6 +49,7 @@ from repro.core.faults import fault_point, with_retries
 from repro.core.integrity import ChecksumError, crc32_array
 from repro.core.kway import merge_sorted_sources
 from repro.graph.storage import Graph
+from repro.obs import tracer as obs
 
 from . import aio as aio_mod
 from .durability import Manifest
@@ -238,7 +239,9 @@ class OocGraph:
         def _raw():
             for i in range(n_chunks):
                 path = os.path.join(self.root, name, f"chunk_{i:06d}.npy")
-                chunk = with_retries(lambda: _read(path))
+                with obs.span("table.scan", table=name, chunk=i) as sp:
+                    chunk = with_retries(lambda: _read(path))
+                    sp.set(rows=int(chunk.shape[0]))
                 if stats is not None:
                     stats.count_scan(chunk.shape[0], chunk.nbytes)
                 yield chunk
@@ -297,6 +300,13 @@ class OocGraph:
         renamed aside (not deleted) until the new one holds the live
         name, so the table is present under `name` at every instant
         except between the two renames."""
+        with obs.span("table.rewrite", table=name) as sp:
+            n_chunks, n_rows = self._rewrite_table_inner(name, chunks,
+                                                         chunk_rows)
+            sp.set(chunks=n_chunks, rows=n_rows)
+        return n_chunks, n_rows
+
+    def _rewrite_table_inner(self, name: str, chunks, chunk_rows: int):
         tmp = os.path.join(self.root, name + ".tmp")
         bak = os.path.join(self.root, name + ".bak")
         shutil.rmtree(tmp, ignore_errors=True)

@@ -32,6 +32,8 @@ import time
 from repro.core import build_bisim, build_bisim_distributed
 from repro.graph import generators as gen
 from repro.graph.storage import Graph
+from repro.obs import MetricsReport, write_chrome_trace
+from repro.obs import tracer as obs
 
 
 def make_graph(args) -> Graph:
@@ -108,6 +110,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "resolve) on device — bit-identical to the host "
                          "path, reported per level")
     ap.add_argument("--no-early-stop", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "to PATH and print the aggregated phase table "
+                         "(works with every subcommand)")
     ap.add_argument("--out", default=None,
                     help="save pid history as .npz: one stacked 'pids' "
                          "array, or per-level 'pids_<j>' members with "
@@ -147,15 +153,13 @@ def _io_threads(args) -> int:
 
 def _report_overlap(aio_stats, compute_s: float) -> None:
     """One-line overlap report: how long the consumer waited on reads vs
-    how long the fold/rank side ran (the paper's I/O-vs-compute split)."""
-    if aio_stats is None:
-        return
-    d = aio_stats.to_dict()
-    print(f"overlap: read_wait={d['read_wait_s']:.3f}s "
-          f"write_wait={d['write_wait_s']:.3f}s "
-          f"fold+rank={compute_s:.3f}s "
-          f"prefetched={d['chunks_prefetched']} "
-          f"streamed_writes={d['chunks_written']}")
+    how long the fold/rank side ran (the paper's I/O-vs-compute split).
+    Formatting lives in `MetricsReport.format_overlap` so every
+    subcommand reports through the same code path."""
+    line = MetricsReport.format_overlap(
+        aio_stats.as_dict() if aio_stats is not None else None, compute_s)
+    if line is not None:
+        print(line)
 
 
 def _report_update(rep, dt: float, m) -> None:
@@ -190,12 +194,13 @@ def run_recover(args) -> None:
     m = BisimMaintainer.restore(backend, state,
                                 device=args.device_maintenance)
     dt = time.perf_counter() - t0
-    io = backend.io
     print(f"recovered: k={m.k} mode={m.mode} "
           f"nodes={backend.num_nodes} tombstones={m.num_tombstones} "
           f"wal_lsn={state['wal_lsn']} in {dt:.2f}s")
-    print(f"recovery io: sort_cost={io.sort_cost} scan_cost={io.scan_cost} "
-          f"sortB={io.sort_bytes} scanB={io.scan_bytes}")
+    print(MetricsReport.format_io(
+        backend.io.as_dict(), label="recovery io",
+        fields=["sort_cost", "scan_cost", "sort_bytes", "scan_bytes"]))
+    _report_overlap(backend.aio.stats, dt)
     print(f"partitions@k={len(np.unique(m.pid()))}")
     print(f"workdir: {backend.workdir}")
 
@@ -263,16 +268,17 @@ def run_maintenance(args, g: Graph) -> None:
     _report_update(rep, dt, m)
     if args.wal:
         t0 = time.perf_counter()
-        m.snapshot()
+        with obs.span("launch.snapshot"):
+            m.snapshot()
         print(f"snapshot: {time.perf_counter() - t0:.2f}s "
               f"(wal truncated to lsn {backend._wal.committed_lsn})")
     if backend is not None:
         io1 = backend.io.to_dict()
         delta = {key: io1[key] - io0[key] for key in io1}
-        print(f"io delta: sort_cost={delta['sort_cost']} "
-              f"scan_cost={delta['scan_cost']} "
-              f"sortB={delta['sort_bytes']} scanB={delta['scan_bytes']} "
-              f"merges={delta['merge_passes']} spills={delta['spills']}")
+        print(MetricsReport.format_io(
+            delta, label="io delta",
+            fields=["sort_cost", "scan_cost", "sort_bytes", "scan_bytes",
+                    "merge_passes", "spills"]))
         _report_overlap(backend.aio.stats, dt)
         if args.workdir:
             print(f"workdir: {backend.workdir}")
@@ -280,39 +286,41 @@ def run_maintenance(args, g: Graph) -> None:
             backend.close()
 
 
-def main() -> None:
-    args = build_parser().parse_args()
-
+def _dispatch(args) -> None:
     if args.cmd == "recover":
-        run_recover(args)  # no graph: state comes from the workdir
+        with obs.span("launch.recover"):
+            run_recover(args)  # no graph: state comes from the workdir
         return
     g = make_graph(args)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
     if args.cmd:
-        run_maintenance(args, g)
+        with obs.span("launch.update", cmd=args.cmd):
+            run_maintenance(args, g)
         return
-    t0 = time.perf_counter()
-    if args.oocore:
-        from repro.exmem import build_bisim_oocore
-        res = build_bisim_oocore(
-            g, args.k, mode=args.mode, chunk_edges=args.chunk_edges,
-            chunk_nodes=args.chunk_nodes, workdir=args.workdir,
-            spill_threshold=args.spill_threshold,
-            early_stop=not args.no_early_stop,
-            io_threads=_io_threads(args),
-            prefetch_depth=args.prefetch_depth,
-            checkpoint=args.checkpoint or args.resume,
-            resume=args.resume)
-    elif args.distributed:
-        res = build_bisim_distributed(
-            g, args.k, mode=args.mode, ranking=args.ranking,
-            early_stop=not args.no_early_stop)
-    else:
-        res = build_bisim(g, args.k, mode=args.mode,
-                          early_stop=not args.no_early_stop)
-    dt = time.perf_counter() - t0
     engine = ("oocore" if args.oocore else
               "dist/" + args.ranking if args.distributed else "single")
+    t0 = time.perf_counter()
+    with obs.span("launch.build", engine=engine, k=args.k,
+                  mode=args.mode):
+        if args.oocore:
+            from repro.exmem import build_bisim_oocore
+            res = build_bisim_oocore(
+                g, args.k, mode=args.mode, chunk_edges=args.chunk_edges,
+                chunk_nodes=args.chunk_nodes, workdir=args.workdir,
+                spill_threshold=args.spill_threshold,
+                early_stop=not args.no_early_stop,
+                io_threads=_io_threads(args),
+                prefetch_depth=args.prefetch_depth,
+                checkpoint=args.checkpoint or args.resume,
+                resume=args.resume)
+        elif args.distributed:
+            res = build_bisim_distributed(
+                g, args.k, mode=args.mode, ranking=args.ranking,
+                early_stop=not args.no_early_stop)
+        else:
+            res = build_bisim(g, args.k, mode=args.mode,
+                              early_stop=not args.no_early_stop)
+    dt = time.perf_counter() - t0
     print(f"k={args.k} mode={args.mode} {engine}")
     for st in res.stats:
         print(f"  iter {st.iteration:2d}: {st.num_partitions:9d} blocks "
@@ -320,11 +328,7 @@ def main() -> None:
               f"scannedB={st.bytes_scanned}")
     print(f"total {dt:.2f}s; converged_at={res.converged_at}")
     if args.oocore:
-        io = res.io
-        print(f"io: sort_cost={io.sort_cost} scan_cost={io.scan_cost} "
-              f"sortB={io.sort_bytes} scanB={io.scan_bytes} "
-              f"runs={io.runs_written} merges={io.merge_passes} "
-              f"spills={io.spills}")
+        print(MetricsReport.format_io(res.io.as_dict()))
         _report_overlap(res.aio, sum(s.seconds for s in res.stats))
         if args.workdir:
             print(f"workdir: {res.workdir}")
@@ -344,6 +348,20 @@ def main() -> None:
         print(f"saved pid history to {args.out}")
     if args.oocore and not args.workdir:
         res.cleanup()  # tempdir workdir: don't strand the spilled tables
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    if not args.trace:
+        _dispatch(args)
+        return
+    tracer = obs.Tracer()
+    with obs.tracing(tracer):
+        _dispatch(args)
+    write_chrome_trace(tracer, args.trace)
+    print(f"trace: {args.trace} ({len(tracer.spans)} spans, "
+          f"{len(tracer.events)} events)")
+    print(MetricsReport.from_tracer(tracer).format())
 
 
 if __name__ == "__main__":

@@ -240,8 +240,8 @@ def test_build_error_mid_fold_leaves_no_thread(tmp_path, monkeypatch):
     real = build_mod._fold_sorted_stream
     state = {"n": 0}
 
-    def _explodes(stream, chunk_edges, dedup, use_kernel=False):
-        for item in real(stream, chunk_edges, dedup, use_kernel):
+    def _explodes(stream, chunk_edges, dedup, use_kernel=False, **kw):
+        for item in real(stream, chunk_edges, dedup, use_kernel, **kw):
             state["n"] += 1
             if state["n"] > 2:
                 raise RuntimeError("fold blew up mid-stream")
