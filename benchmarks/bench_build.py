@@ -23,7 +23,11 @@ def run(scale: int = 1, k: int = 10):
     rows = []
     datasets = suite(scale)
     for name, g in datasets.items():
-        res = build_bisim(g, k, mode="sorted", early_stop=True)
+        # per-build tracer: the total row carries the dispatch/sync
+        # counts the fused while_loop build contracts to (1 and 1)
+        t = obs.Tracer()
+        with obs.tracing(t):
+            res = build_bisim(g, k, mode="sorted", early_stop=True)
         for st in res.stats:
             rows.append((
                 f"build/{name}/iter{st.iteration}",
@@ -36,7 +40,9 @@ def run(scale: int = 1, k: int = 10):
             f"build/{name}/total", sum(s.seconds for s in res.stats) * 1e6,
             f"converged_at={res.converged_at};"
             f"final_partitions={res.counts[-1]};"
-            f"partition_ratio={res.counts[-1] / g.num_nodes:.4f}"))
+            f"partition_ratio={res.counts[-1] / g.num_nodes:.4f};"
+            f"dispatches={len(t.find_events('build.dispatch'))};"
+            f"sync_count={len(t.find_events('build.sync'))}"))
     # one tracer across the oocore rows: the BENCH payload gains a
     # "phases" breakdown (where the disk build's time actually goes)
     tracer = obs.Tracer()

@@ -126,12 +126,20 @@ def run_device_vs_host(scale: int = 1, k: int = 3, trials: int = 7):
             for _ in range(trials):
                 host_s = min(host_s, _timed(m_host, frontier))
                 dev_s = min(dev_s, _timed(m_dev, frontier))
+            # one traced propagate for the dispatch/sync columns: the
+            # fused k-loop steady state is 1 dispatch + 1 scalar sync
+            # for the whole level ladder
+            t = obs.Tracer()
+            with obs.tracing(t):
+                m_dev._propagate(frontier)
             rows.append((
                 f"maintenance/powerlaw1p6M/{mode}/propagate_device_f{size}",
                 dev_s * 1e6,
                 f"frontier={size};host_us={host_s * 1e6:.0f};"
                 f"device_us={dev_s * 1e6:.0f};"
-                f"speedup={host_s / dev_s:.2f}x"))
+                f"speedup={host_s / dev_s:.2f}x;"
+                f"dispatches={len(t.find_events('maint.dispatch'))};"
+                f"sync_count={len(t.find_events('maint.sync'))}"))
     return rows
 
 

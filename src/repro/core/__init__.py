@@ -6,6 +6,39 @@ Public API:
   build_bisim_distributed  — Algorithm 1 over a device mesh (shard_map)
   BisimMaintainer          — Algorithms 2-4 (+ deletions, change-k)
   oracle_pids              — exact Definition-1 oracle for validation
+
+Device execution model
+======================
+Everything device-side is built around one rule: **dispatch and sync
+counts are part of the contract**, not an implementation detail.  Host
+round-trips — not FLOPs — dominate at the frontier/graph sizes the paper
+benchmarks, so each path documents how many XLA program launches and
+device->host transfers it performs, and the tracer (`repro.obs`) emits a
+``build.dispatch``/``build.sync`` or ``maint.dispatch``/``maint.sync``
+event at every one of them so tests and benchmarks can count.
+
+* **Fused build** (``build_bisim(fused=True)``, the default without
+  per-level stores): the entire k-iteration loop runs inside a single
+  jitted ``lax.while_loop`` program — exactly ONE dispatch and ONE
+  device->host sync (the final history fetch) per build, at any k.
+* **Staged build** (``with_store=True`` or ``fused=False``): one fused
+  signature->rank program per iteration, draining scalars every
+  ``sync_every`` iterations.
+* **Fused maintenance** (``propagate_levels_resident``): all k levels of
+  the frontier fold + store probe/mint/insert unroll into ONE jitted
+  program; in the steady state (no partition change) a whole propagate
+  costs one gather, one upload, one dispatch and one two-scalar sync.
+  The first level that actually changes falls back down the ladder.
+* **Fallback ladder**: fused k-loop -> per-level device-fused
+  (``resident_level_resolve``) -> staged device (probe/resolve/merge as
+  separate programs) -> pure host.  Every rung is bit-identical to the
+  host reference (asserted by tests/test_fused_build.py and the update
+  fuzz harness); a device failure permanently degrades the maintainer to
+  the next rung, never changes results.
+* **Bucketing policy**: all device batch shapes are padded to
+  ``device_maint.bucket(n)`` — the next power of two, floored at
+  ``BUCKET_FLOOR`` — so padding waste stays under 2x while the compiled
+  program cache stays O(log max_n) entries per call site.
 """
 from .partition import (BisimResult, IterationStats, bisim_step, build_bisim,
                         partition_blocks, refines, same_partition)

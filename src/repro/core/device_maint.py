@@ -21,17 +21,29 @@ path the maintainer switches to with ``device=True``:
   * `DeviceSigStore` — a device mirror of the array-backed `SigStore`:
     the sorted (hi, lo) u32 key lanes and the int32 pid column live as
     device arrays padded to a power-of-two capacity with all-ones
-    sentinels.  `get_or_assign_pairs` is a sort-free jitted probe
-    (binary search over key pairs — the steady state of propagation,
-    where every signature is already in S) plus, on a miss, a jitted
-    mint plan (first-occurrence pid assignment) and a merge-insert
-    whose old columns are donated back to XLA.  Results are
-    bit-identical to
+    sentinels.  `probe_mint_insert` is the fused resolve: binary-search
+    probe, first-occurrence pid minting and merge-insert in ONE jitted
+    program (one dispatch, one host sync per resolve) — the mint + merge
+    half sits behind a `lax.cond`, so the all-found steady state of
+    propagation never pays for the sort.  The old columns are donated
+    back to XLA on accelerators.  The staged three-step path
+    (`_probe_step` -> `_resolve_step` -> `_merge_step`) is kept as the
+    bit-parity reference.  Results are bit-identical to
     `SigStore.get_or_assign` (same probe keys -> same pids, same
     next_pid), so device and host propagation agree bit-for-bit.  The
     host `SigStore` is re-materialized lazily (`to_host`) only when the
     store is extracted — between updates the columns never leave the
     device.
+
+  * `resident_level_resolve` — the cross-level maintenance residency
+    program: fold + probe + mint + changed-mask for one propagation
+    level fused into a single dispatch, returning only two scalars
+    (n_novel, n_changed) to the host in the steady state; the pid deltas
+    cross back only for levels where something actually changed, and the
+    merge-insert runs as a separate dispatch only when something was
+    novel.  `BisimMaintainer._propagate` drives it level by level, so a
+    k-level propagation where nothing changes costs k dispatches and k
+    scalar syncs — no N-sized transfer at all.
 
 Keys are kept as two u32 lanes (not fused u64) because JAX runs without
 x64 and TPU vector units are 32-bit; lexicographic (hi, lo) order equals
@@ -57,8 +69,26 @@ _I32_MAX = np.iinfo(np.int32).max
 _SENT = jnp.uint32(0xFFFFFFFF)
 
 
-def bucket(n: int, floor: int = 8) -> int:
-    """Smallest power of two >= max(n, floor) (jit shape bucketing)."""
+# Default bucket floor: shapes below this collapse into one bucket, which
+# bounds the number of compiled programs for tiny batches.  Callers that
+# care about padding waste on small batches can pass a smaller floor.
+BUCKET_FLOOR = 8
+
+
+def bucket(n: int, floor: "int | None" = None) -> int:
+    """Smallest power of two >= max(n, floor) (jit shape bucketing).
+
+    ``floor`` (default `BUCKET_FLOOR`) must be a power of two.  For
+    n >= floor the padding waste is strictly under 2x (the next power of
+    two above n is < 2n), and the number of distinct buckets — hence
+    compiled XLA programs — is O(log(max_n)) per call site; below the
+    floor everything shares one bucket, trading at most floor/n padding
+    on tiny batches for a single compiled program.
+    """
+    if floor is None:
+        floor = BUCKET_FLOOR
+    if floor < 1 or (floor & (floor - 1)):
+        raise ValueError(f"bucket floor must be a power of two, got {floor}")
     b = floor
     while b < n:
         b <<= 1
@@ -137,6 +167,7 @@ def _host_segsum_fold(lab_dev, tgt_p, seg, p0_vals, e: int, num_sigs: int):
     prefix sum).  Returns host (hi, lo) padded to ``bucket(num_sigs)``
     so downstream probe shapes match the all-device arrangement."""
     e_hi, e_lo = _edge_hash_pairs(lab_dev, jnp.asarray(tgt_p))
+    obs.event("maint.sync", what="edge_hash", edges=e)
     e_hi = np.asarray(e_hi)[:e]
     e_lo = np.asarray(e_lo)[:e]
     seg_hi = np.zeros(num_sigs, np.uint32)
@@ -275,12 +306,9 @@ def _searchsorted_pairs(khi, klo, qhi, qlo):
     return lo
 
 
-@jax.jit
-def _probe_step(khi, klo, kpid, qhi, qlo, count, size):
-    """Probe-only fast path: binary search + gather, no sort.  In steady
-    propagation most frontier signatures already live in S, so the
-    common resolve is this program plus one (out, n_miss) transfer; the
-    mint plan below only runs when something was actually novel."""
+def _probe_core(khi, klo, kpid, qhi, qlo, count, size):
+    """Shared probe: binary search + gather.  Returns (valid, found, out)
+    with out = stored pid where found, -1 elsewhere."""
     cap = khi.shape[0]
     p = qhi.shape[0]
     valid = jnp.arange(p, dtype=jnp.int32) < count
@@ -288,26 +316,17 @@ def _probe_step(khi, klo, kpid, qhi, qlo, count, size):
     idxc = jnp.minimum(idx, cap - 1)
     found = (khi[idxc] == qhi) & (klo[idxc] == qlo) & (idx < size) & valid
     out = jnp.where(found, kpid[idxc], jnp.int32(-1))
-    n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
-    return out, n_miss
+    return valid, found, out
 
 
-@jax.jit
-def _resolve_step(khi, klo, kpid, qhi, qlo, count, size, next_pid):
-    """Probe + mint plan: one program per (capacity, probe) bucket pair.
-
-    Mirrors `SigStore.get_or_assign` exactly: found keys return their
-    stored pid; novel keys mint ``next_pid + rank`` where rank is the
-    order of first occurrence in the probe batch.  Returns everything the
-    merge step needs so nothing is recomputed on insert.
+def _mint_plan(qhi, qlo, valid, found, out, next_pid):
+    """Shared mint plan: first-occurrence pid assignment for the missing
+    probe keys.  Mirrors `SigStore.get_or_assign` exactly: found keys
+    keep their stored pid; novel keys mint ``next_pid + rank`` where rank
+    is the order of first occurrence in the probe batch.  Returns
+    everything the merge step needs so nothing is recomputed on insert.
     """
-    cap = khi.shape[0]
     p = qhi.shape[0]
-    valid = jnp.arange(p, dtype=jnp.int32) < count
-    idx = _searchsorted_pairs(khi, klo, qhi, qlo)
-    idxc = jnp.minimum(idx, cap - 1)
-    found = (khi[idxc] == qhi) & (klo[idxc] == qlo) & (idx < size) & valid
-    out = jnp.where(found, kpid[idxc], jnp.int32(-1))
     miss = jnp.logical_and(valid, ~found)
     # group the missing keys (sentinel-masked so found/padding sort last);
     # miss-before-masked then position as tiebreaks, so each group head is
@@ -336,6 +355,24 @@ def _resolve_step(khi, klo, kpid, qhi, qlo, count, size, next_pid):
     out = out.at[sidx].set(jnp.where(smiss, minted, out[sidx]))
     n_novel = jnp.sum(is_first).astype(jnp.int32)
     return out, n_novel, sh, sl, minted, is_first
+
+
+@jax.jit
+def _probe_step(khi, klo, kpid, qhi, qlo, count, size):
+    """Probe-only program (staged reference path): binary search +
+    gather, no sort.  Kept as the bit-parity oracle for the fused
+    `probe_mint_insert` program below."""
+    valid, found, out = _probe_core(khi, klo, kpid, qhi, qlo, count, size)
+    n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
+    return out, n_miss
+
+
+@jax.jit
+def _resolve_step(khi, klo, kpid, qhi, qlo, count, size, next_pid):
+    """Probe + mint plan (staged reference path): one program per
+    (capacity, probe) bucket pair."""
+    valid, found, out = _probe_core(khi, klo, kpid, qhi, qlo, count, size)
+    return _mint_plan(qhi, qlo, valid, found, out, next_pid)
 
 
 def _merge_step_impl(khi, klo, kpid, sh, sl, minted, is_first, size, *,
@@ -378,6 +415,362 @@ def _merge_step(*args, new_cap: int):
     return _merge_step_jit(*args, new_cap=new_cap)
 
 
+def _pad_columns(khi, klo, kpid, new_cap: int):
+    """Grow the sorted columns to `new_cap` without touching content."""
+    cap = khi.shape[0]
+    if new_cap == cap:
+        return khi, klo, kpid
+    extra = new_cap - cap
+    return (jnp.concatenate([khi, jnp.full(extra, _SENT)]),
+            jnp.concatenate([klo, jnp.full(extra, _SENT)]),
+            jnp.concatenate([kpid, jnp.zeros(extra, jnp.int32)]))
+
+
+def _probe_mint_insert_impl(khi, klo, kpid, qhi, qlo, count, size,
+                            next_pid, *, new_cap: int):
+    """The fused resolve: probe + mint + merge-insert as ONE program.
+
+    The mint plan and the merge (a multi-key sort) sit behind a
+    `lax.cond` on the miss count, so the all-found steady state executes
+    only the branchless binary search plus a column pad/copy — XLA's
+    conditional runs a single branch.  Any miss implies at least one
+    novel key (a missing key is by definition not in S), so the mint
+    branch never merges an empty batch.
+
+    Returns (out, n_novel, new_khi, new_klo, new_kpid); the new columns
+    are correct in BOTH branches (the no-miss branch passes the old
+    content through, padded to `new_cap`), so the caller rebinds
+    unconditionally — which also keeps donation sound on accelerators.
+    """
+    valid, found, out = _probe_core(khi, klo, kpid, qhi, qlo, count, size)
+    n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
+
+    def with_mint(_):
+        out2, n_novel, sh, sl, minted, is_first = _mint_plan(
+            qhi, qlo, valid, found, out, next_pid)
+        nkhi, nklo, nkpid = _merge_step_impl(
+            khi, klo, kpid, sh, sl, minted, is_first, size,
+            new_cap=new_cap)
+        return out2, n_novel, nkhi, nklo, nkpid
+
+    def no_mint(_):
+        nkhi, nklo, nkpid = _pad_columns(khi, klo, kpid, new_cap)
+        return out, jnp.int32(0), nkhi, nklo, nkpid
+
+    return jax.lax.cond(n_miss > 0, with_mint, no_mint, None)
+
+
+_probe_mint_insert_jit = None
+
+
+def _probe_mint_insert(*args, new_cap: int):
+    """Lazy jit of the fused resolve; donates the store columns on
+    accelerators (the caller always rebinds to the outputs)."""
+    global _probe_mint_insert_jit
+    if _probe_mint_insert_jit is None:
+        donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
+        _probe_mint_insert_jit = jax.jit(
+            _probe_mint_insert_impl, static_argnames=("new_cap",),
+            donate_argnums=donate)
+    return _probe_mint_insert_jit(*args, new_cap=new_cap)
+
+
+@jax.jit
+def _level_resident_step(p0, lab, tgt, bounds, e_count, khi, klo, kpid,
+                         size, next_pid, old_pid, count):
+    """One maintenance level as ONE program: presorted/deduplicated fold
+    (hash lanes + segment wrap-sum + final mix), store probe, cond-gated
+    mint plan, and the changed-vs-old mask — so the steady state of
+    propagation transfers exactly two scalars per level.
+
+    The merge-insert is NOT part of this program: novelty is rare in
+    propagation, and folding the merge in would force a store-capacity
+    copy per level on backends that ignore donation.  The caller runs
+    `_merge_step` as a second dispatch only when n_novel > 0, feeding it
+    the (sh, sl, minted, is_first) plan returned here.
+    """
+    nb = p0.shape[0]
+    qhi, qlo = sig.frontier_signature_hashes_presorted(
+        p0, lab, tgt, bounds, e_count, num_sigs=nb)
+    valid, found, out = _probe_core(khi, klo, kpid, qhi, qlo, count, size)
+    n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
+    p = qhi.shape[0]
+
+    def with_mint(_):
+        return _mint_plan(qhi, qlo, valid, found, out, next_pid)
+
+    def no_mint(_):
+        return (out, jnp.int32(0), jnp.full((p,), _SENT),
+                jnp.full((p,), _SENT), jnp.zeros((p,), jnp.int32),
+                jnp.zeros((p,), bool))
+
+    out, n_novel, sh, sl, minted, is_first = jax.lax.cond(
+        n_miss > 0, with_mint, no_mint, None)
+    changed = valid & (out != old_pid)
+    n_changed = jnp.sum(changed).astype(jnp.int32)
+    return out, n_novel, n_changed, changed, sh, sl, minted, is_first
+
+
+@jax.jit
+def _levels_resident_step(p0, count, labs, tgts, boundss, es, olds,
+                          stores, sizes, next_pids):
+    """ALL maintenance levels as ONE program (tentpole: one dispatch per
+    k-loop).  Levels unroll at trace time — a `lax.scan` cannot carry the
+    per-level store columns, whose capacities differ — but the compiled
+    artifact is still a single XLA dispatch whose steady-state sync is
+    the two stacked scalar vectors (n_novel, n_changed per level).
+
+    Level j's fold consumes pId_{j-1} of the frontier targets *as
+    uploaded before the dispatch*, which is only valid while earlier
+    levels changed nothing: the host trusts the results up to and
+    including the FIRST level with a nonzero scalar and re-runs the rest
+    through the per-level ladder.  Rows past that level are garbage and
+    ignored (computing them costs a few fold+probe passes, which the
+    per-level path would have spent anyway).
+
+    `labs`/`boundss`/`es` are either shared across levels (1-D / scalar:
+    the multiset route, where the fold constants are frontier-only) or
+    stacked per level (the set-semantics routes, where the host dedup
+    reorders each level differently); the discrimination is static.
+    """
+    k = tgts.shape[0]
+    n_novels, n_changeds, per_level = [], [], []
+    for j in range(k):
+        lab = labs if labs.ndim == 1 else labs[j]
+        bounds = boundss if boundss.ndim == 1 else boundss[j]
+        e = es if es.ndim == 0 else es[j]
+        khi, klo, kpid = stores[j]
+        nb = p0.shape[0]
+        qhi, qlo = sig.frontier_signature_hashes_presorted(
+            p0, lab, tgts[j], bounds, e, num_sigs=nb)
+        valid, found, out = _probe_core(khi, klo, kpid, qhi, qlo, count,
+                                        sizes[j])
+        n_miss = jnp.sum(valid & ~found).astype(jnp.int32)
+        p = qhi.shape[0]
+
+        def with_mint(_, qhi=qhi, qlo=qlo, valid=valid, found=found,
+                      out=out, npid=next_pids[j]):
+            return _mint_plan(qhi, qlo, valid, found, out, npid)
+
+        def no_mint(_, out=out, p=p):
+            return (out, jnp.int32(0), jnp.full((p,), _SENT),
+                    jnp.full((p,), _SENT), jnp.zeros((p,), jnp.int32),
+                    jnp.zeros((p,), bool))
+
+        out, n_novel, sh, sl, minted, is_first = jax.lax.cond(
+            n_miss > 0, with_mint, no_mint, None)
+        changed = valid & (out != olds[j])
+        n_novels.append(n_novel)
+        n_changeds.append(jnp.sum(changed).astype(jnp.int32))
+        per_level.append((out, changed, sh, sl, minted, is_first))
+    return jnp.stack(n_novels), jnp.stack(n_changeds), tuple(per_level)
+
+
+def resident_levels_resolve(dstores, pid0_vals, seg, elabel, tgts,
+                            num_sigs: int, olds, next_pids, *,
+                            dedup: bool = True, bounds=None,
+                            cache: "dict | None" = None, cache_key=None):
+    """Resolve ALL propagation levels in one dispatch (the fused k-loop).
+
+    ``dstores``/``tgts``/``olds``/``next_pids`` are per-level (level j =
+    index j-1): `tgts[j]` is pId_j(tgt) of the frontier's out-edge
+    targets, `olds[j]` the frontier's current pId_{j+1} column.  The
+    shared fold constants (pId_0, labels, boundaries) upload once — and
+    on the multiset route stay device-resident across *calls* through
+    the same ``cache`` the per-level `resident_level_resolve` uses.
+
+    Returns ``(nclean, dirty, next_pid_d)``:
+
+      * nclean  — number of leading levels confirmed unchanged (their
+        pids, stores and next_pid are untouched by construction);
+      * dirty   — None when every level is clean, else the per-level
+        resident-result triple ``(pj int64, changed bool, n_changed)``
+        for level ``nclean + 1``, whose inputs were still valid; its
+        store merge (if anything was novel) has already been applied;
+      * next_pid_d — the (possibly advanced) next_pid of that dirty
+        level, or None when dirty is None.
+
+    Levels past the first dirty one must be recomputed by the caller
+    (their uploaded target pids were stale the moment something
+    changed).  A no-change propagation costs exactly ONE dispatch and
+    ONE two-vector scalar sync for the whole k-loop.
+    """
+    k = len(tgts)
+    e = int(np.asarray(elabel).shape[0])
+    nb = bucket(num_sigs)
+    use_cache = cache is not None and cache_key is not None and not dedup
+    if not dedup:
+        if use_cache and cache.get("key") is not None \
+                and cache["e"] == e \
+                and np.array_equal(cache["key"], cache_key):
+            p0_dev = cache["p0_dev"]
+            lab_dev = cache["lab_dev"]
+            bounds_dev = cache["bounds_dev"]
+            eb = lab_dev.shape[0]
+        else:
+            p0, lab_p, _tgt_p, bounds_p, _seg_p, e, _dd = _prepare_batch(
+                pid0_vals, seg, elabel, tgts[0], num_sigs, dedup=False,
+                bounds=bounds, device_sort=False)
+            eb = lab_p.shape[0]
+            p0_dev = jnp.asarray(p0)
+            lab_dev = jnp.asarray(lab_p)
+            bounds_dev = jnp.asarray(bounds_p)
+            if use_cache:
+                cache.update(key=np.asarray(cache_key).copy(), e=e,
+                             p0_dev=p0_dev, lab_dev=lab_dev,
+                             bounds_dev=bounds_dev)
+        tgt_stack = np.zeros((k, eb), np.uint32)
+        for j in range(k):
+            tgt_stack[j, :e] = np.asarray(tgts[j]).astype(np.uint32,
+                                                          copy=False)
+        labs, boundss, es = lab_dev, bounds_dev, np.int32(e)
+    else:
+        # set semantics: the exact host lexsort dedup, per level (the
+        # survivors depend on the level's target pids)
+        cols = [_prepare_batch(pid0_vals, seg, elabel, tgts[j], num_sigs,
+                               dedup=True, bounds=bounds,
+                               device_sort=False)
+                for j in range(k)]
+        eb = max(c[1].shape[0] for c in cols)
+        labs_h = np.zeros((k, eb), np.uint32)
+        tgt_stack = np.zeros((k, eb), np.uint32)
+        boundss_h = np.zeros((k, nb + 1), np.int32)
+        es_h = np.zeros(k, np.int32)
+        for j, (p0, lab_p, tgt_p, bounds_p, _sp, e_j, _dd) in \
+                enumerate(cols):
+            labs_h[j, : lab_p.shape[0]] = lab_p
+            tgt_stack[j, : tgt_p.shape[0]] = tgt_p
+            boundss_h[j] = bounds_p
+            es_h[j] = e_j
+        p0_dev = jnp.asarray(cols[0][0])
+        labs, boundss, es = labs_h, boundss_h, es_h
+    old_stack = np.zeros((k, nb), np.int32)
+    for j in range(k):
+        old_stack[j, :num_sigs] = np.asarray(olds[j]).astype(np.int32,
+                                                             copy=False)
+    obs.event("maint.dispatch", what="levels_resident", keys=num_sigs,
+              levels=k)
+    novs_d, nchs_d, per_level = _levels_resident_step(
+        p0_dev, np.int32(num_sigs), labs, tgt_stack, boundss, es,
+        old_stack, tuple((d.khi, d.klo, d.kpid) for d in dstores),
+        np.asarray([d.size for d in dstores], np.int32),
+        np.asarray(next_pids, np.int32))
+    # THE steady-state sync: two k-vectors of scalars for the whole loop
+    obs.event("maint.sync", what="levels_scalars", keys=num_sigs,
+              levels=k)
+    novs, nchs = (np.asarray(x) for x in jax.device_get((novs_d, nchs_d)))
+    dirty_lvls = np.flatnonzero((novs > 0) | (nchs > 0))
+    if dirty_lvls.size == 0:
+        return k, None, None
+    d = int(dirty_lvls[0])
+    out, changed, sh, sl, minted, is_first = per_level[d]
+    n_novel = int(novs[d])
+    next_pid_d = int(next_pids[d])
+    if n_novel:
+        if next_pid_d + n_novel > _I32_MAX:
+            raise OverflowError(
+                "device store pid space exceeded int32; rebuild to "
+                "re-densify pids")
+        dstore = dstores[d]
+        new_size = dstore.size + n_novel
+        obs.event("maint.dispatch", what="merge_insert", minted=n_novel)
+        dstore.khi, dstore.klo, dstore.kpid = _merge_step(
+            dstore.khi, dstore.klo, dstore.kpid, sh, sl, minted, is_first,
+            jnp.int32(dstore.size), new_cap=bucket(new_size))
+        dstore.size = new_size
+        dstore._host = None
+        next_pid_d += n_novel
+    n_changed = int(nchs[d])
+    obs.event("maint.sync", what="level_deltas", changed=n_changed)
+    out_h, changed_h = jax.device_get((out[:num_sigs],
+                                       changed[:num_sigs]))
+    return d, (np.asarray(out_h).astype(np.int64), np.asarray(changed_h),
+               n_changed), next_pid_d
+
+
+def resident_level_resolve(dstore, pid0_vals, seg, elabel, pid_tgt,
+                           num_sigs: int, old_pid, next_pid: int, *,
+                           dedup: bool = True, bounds=None,
+                           cache: "dict | None" = None, cache_key=None):
+    """Fold + resolve + changed-mask for one propagation level in one
+    dispatch (tentpole residency path).
+
+    Bit-identical to `frontier_fold` + `SigStore.get_or_assign` + the
+    host ``old != new`` comparison: the set-semantics dedup runs on host
+    exactly as the host path's lexsort would, and every device op is the
+    same integer arithmetic.  Returns
+
+        (pids int64 [num_sigs] | None, changed bool [num_sigs] | None,
+         n_changed, next_pid')
+
+    where the arrays are None iff n_changed == 0 — the per-level pid
+    deltas only cross back to host for levels that actually changed.
+    ``cache``/``cache_key`` keep the multiset route's per-frontier device
+    constants (pId_0, labels, boundaries) resident across levels, like
+    `frontier_fold`'s cache (dedup modes reorder per level and bypass
+    it).
+    """
+    use_cache = cache is not None and cache_key is not None and not dedup
+    if use_cache and cache.get("key") is not None \
+            and cache["e"] == int(np.asarray(pid_tgt).shape[0]) \
+            and np.array_equal(cache["key"], cache_key):
+        # hit: the fold constants (pId_0, labels, boundaries) are already
+        # device-resident for this frontier; only the tgt column moves
+        e = cache["e"]
+        p0_dev = cache["p0_dev"]
+        lab_dev = cache["lab_dev"]
+        bounds_dev = cache["bounds_dev"]
+        eb = lab_dev.shape[0]
+        nb = p0_dev.shape[0]
+        tgt_p = np.empty(eb, np.uint32)
+        tgt_p[:e] = np.asarray(pid_tgt).astype(np.uint32, copy=False)
+        tgt_p[e:] = 0
+    else:
+        p0, lab_p, tgt_p, bounds_p, _seg_p, e, _dd = _prepare_batch(
+            pid0_vals, seg, elabel, pid_tgt, num_sigs, dedup=dedup,
+            bounds=bounds, device_sort=False)
+        nb = p0.shape[0]
+        p0_dev = jnp.asarray(p0)
+        lab_dev = jnp.asarray(lab_p)
+        bounds_dev = jnp.asarray(bounds_p)
+        if use_cache:
+            cache.update(key=np.asarray(cache_key).copy(), e=e,
+                         p0_dev=p0_dev, lab_dev=lab_dev,
+                         bounds_dev=bounds_dev)
+    old_p = np.zeros(nb, np.int32)
+    old_p[:num_sigs] = np.asarray(old_pid).astype(np.int32, copy=False)
+    obs.event("maint.dispatch", what="level_resident", keys=num_sigs)
+    out, n_novel_d, n_changed_d, changed, sh, sl, minted, is_first = \
+        _level_resident_step(
+            p0_dev, lab_dev, jnp.asarray(tgt_p), bounds_dev, jnp.int32(e),
+            dstore.khi, dstore.klo, dstore.kpid, jnp.int32(dstore.size),
+            jnp.int32(next_pid), jnp.asarray(old_p), jnp.int32(num_sigs))
+    # THE steady-state sync: two scalars per level
+    obs.event("maint.sync", what="level_scalars", keys=num_sigs)
+    n_novel, n_changed = (int(x) for x in
+                          jax.device_get((n_novel_d, n_changed_d)))
+    if n_novel:
+        if next_pid + n_novel > _I32_MAX:
+            raise OverflowError(
+                "device store pid space exceeded int32; rebuild to "
+                "re-densify pids")
+        new_size = dstore.size + n_novel
+        obs.event("maint.dispatch", what="merge_insert", minted=n_novel)
+        dstore.khi, dstore.klo, dstore.kpid = _merge_step(
+            dstore.khi, dstore.klo, dstore.kpid, sh, sl, minted, is_first,
+            jnp.int32(dstore.size), new_cap=bucket(new_size))
+        dstore.size = new_size
+        dstore._host = None
+    next_pid += n_novel
+    if n_changed == 0:
+        return None, None, 0, next_pid
+    obs.event("maint.sync", what="level_deltas", changed=n_changed)
+    out_h, changed_h = jax.device_get(
+        (out[:num_sigs], changed[:num_sigs]))
+    return (np.asarray(out_h).astype(np.int64), np.asarray(changed_h),
+            n_changed, next_pid)
+
+
 class DeviceSigStore:
     """Device mirror of one level's `SigStore` (sorted key/pid columns as
     device arrays; probe + merge-insert run on device).
@@ -414,46 +807,55 @@ class DeviceSigStore:
         return self.size
 
     # ------------------------------------------------------------- resolve
-    def get_or_assign_pairs(self, qhi, qlo, count: int,
-                            next_pid: int) -> tuple[np.ndarray, int]:
-        """Bulk get-or-assign over bucket-padded (hi, lo) probe lanes.
+    def probe_mint_insert(self, qhi, qlo, count: int,
+                          next_pid: int) -> tuple[np.ndarray, int]:
+        """The fused resolve primitive: probe + mint + merge-insert in ONE
+        jitted program, ONE dispatch and ONE device->host sync per call.
 
         `qhi`/`qlo` may be device arrays straight out of `frontier_fold`
-        (no host round-trip) or bucket-padded numpy arrays; only the first
-        `count` entries are real probes.  Returns (pids int64 [count],
-        next_pid') — bit-identical to `SigStore.get_or_assign` on the
-        fused keys.
+        (no host round-trip) or bucket-padded numpy arrays; only the
+        first `count` entries are real probes.  Returns (pids int64
+        [count], next_pid') — bit-identical to `SigStore.get_or_assign`
+        on the fused keys, and to the staged
+        `_probe_step`/`_resolve_step`/`_merge_step` path (asserted by
+        tests/test_fused_build.py).
 
-        The all-found case (the steady state of propagation) costs one
-        sort-free probe program; the mint + merge-insert plan runs only
-        when the probe reports misses.
+        The target capacity is computed on host from worst-case growth
+        (every probe novel), so regrowth stays capacity-bucketed: the
+        program cache holds O(log^2) entries over (capacity, probe,
+        new-capacity) buckets per session.
         """
+        if next_pid + count > _I32_MAX:
+            raise OverflowError(
+                "device store pid space exceeded int32; rebuild to "
+                "re-densify pids")
         qhi = jnp.asarray(qhi)
         qlo = jnp.asarray(qlo)
-        with obs.span("store.probe_device", keys=count):
-            out, n_miss = _probe_step(
-                self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
-                jnp.int32(self.size))
-        if int(n_miss) == 0:
-            return np.asarray(out[:count]).astype(np.int64), next_pid
-        with obs.span("store.resolve_device", keys=count) as sp:
-            out, n_novel, sh, sl, minted, is_first = _resolve_step(
-                self.khi, self.klo, self.kpid, qhi, qlo, jnp.int32(count),
-                jnp.int32(self.size), jnp.int32(next_pid))
-            n = int(n_novel)
+        cap = self.khi.shape[0]
+        new_cap = cap if self.size + count <= cap \
+            else bucket(self.size + count)
+        with obs.span("store.resolve_device", keys=count, fused=True) as sp:
+            obs.event("maint.dispatch", what="probe_mint_insert",
+                      keys=count)
+            out, n_novel, self.khi, self.klo, self.kpid = \
+                _probe_mint_insert(
+                    self.khi, self.klo, self.kpid, qhi, qlo,
+                    jnp.int32(count), jnp.int32(self.size),
+                    jnp.int32(next_pid), new_cap=new_cap)
+            obs.event("maint.sync", what="probe_mint_insert", keys=count)
+            out_h, n = jax.device_get((out[:count], n_novel))
+            n = int(n)
             sp.set(minted=n)
             if n:
-                if next_pid + n > _I32_MAX:
-                    raise OverflowError(
-                        "device store pid space exceeded int32; rebuild to "
-                        "re-densify pids")
-                new_size = self.size + n
-                self.khi, self.klo, self.kpid = _merge_step(
-                    self.khi, self.klo, self.kpid, sh, sl, minted, is_first,
-                    jnp.int32(self.size), new_cap=bucket(new_size))
-                self.size = new_size
+                self.size += n
                 self._host = None  # mirrored back lazily on extraction
-        return np.asarray(out[:count]).astype(np.int64), next_pid + n
+        return np.asarray(out_h).astype(np.int64), next_pid + n
+
+    def get_or_assign_pairs(self, qhi, qlo, count: int,
+                            next_pid: int) -> tuple[np.ndarray, int]:
+        """Bulk get-or-assign over bucket-padded (hi, lo) probe lanes —
+        the fused `probe_mint_insert` under its historical name."""
+        return self.probe_mint_insert(qhi, qlo, count, next_pid)
 
     def get_or_assign_keys(self, keys, next_pid: int) -> tuple[np.ndarray,
                                                                int]:

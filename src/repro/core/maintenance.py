@@ -244,6 +244,7 @@ class MaintenanceBackend(abc.ABC):
         """`resolve` over bucket-padded (hi, lo) hash lanes (only the
         first `count` are real) — the device fold feeds this without a
         host round-trip.  Default: fuse on host and resolve there."""
+        obs.event("maint.sync", what="fold_pairs", keys=count)
         return self.resolve(
             j, fuse_key(np.asarray(hi)[:count], np.asarray(lo)[:count]))
 
@@ -257,6 +258,30 @@ class MaintenanceBackend(abc.ABC):
         if pair is None:
             return None
         return self.resolve_pairs(j, pair[0], pair[1], frontier.size)
+
+    def propagate_level_resident(self, j: int, frontier: np.ndarray, *,
+                                 dedup: bool = True):
+        """The fully-fused device level (fold + probe + mint + changed
+        mask in one dispatch, scalars-only sync in the steady state).
+        Returns None when the capability is absent — the maintainer then
+        falls through to `propagate_level_device`, then to the host path
+        (the fallback ladder device-fused -> device-staged -> host) —
+        else ``(pj int64 [f] | None, changed bool [f] | None,
+        n_changed)`` where the arrays are None iff n_changed == 0."""
+        return None
+
+    def propagate_levels_resident(self, frontier: np.ndarray, *,
+                                  dedup: bool = True):
+        """ALL k levels as one device dispatch (the fused k-loop): valid
+        while nothing changes, which is exactly the regime where
+        per-level dispatch overhead dominates.  Returns None when the
+        capability is absent, else ``(nclean, dirty)`` where the first
+        ``nclean`` levels are confirmed unchanged and ``dirty`` is
+        either None (every level clean) or the per-level resident-result
+        triple for level ``nclean + 1``; the maintainer re-runs any
+        remaining levels through the per-level ladder, whose inputs the
+        change invalidated."""
+        return None
 
     # -------------------------------------------------------------- gathers
     @abc.abstractmethod
@@ -351,6 +376,7 @@ class InMemoryBackend(MaintenanceBackend):
         self._dstores: Optional[list] = None
         self._stores: Optional[list] = None
         self._fold_cache: dict = {}
+        self._resident_cache: dict = {}
 
     # ----------------------------------------------------- device capability
     def enable_device(self, store_on_device: bool = True) -> bool:
@@ -414,6 +440,7 @@ class InMemoryBackend(MaintenanceBackend):
         # every graph mutation funnels through here: drop the fold
         # batch's cached device constants (labels/bounds/pId_0)
         self._fold_cache = {}
+        self._resident_cache = {}
 
     # ---------------------------------------------------------- pid history
     def pid_column(self, j: int) -> np.ndarray:
@@ -482,6 +509,49 @@ class InMemoryBackend(MaintenanceBackend):
                              dedup=dedup,
                              bounds=self._frontier_bounds(frontier),
                              cache=self._fold_cache, cache_key=frontier)
+
+    def propagate_level_resident(self, j: int, frontier: np.ndarray, *,
+                                 dedup: bool = True):
+        """The fused per-level device program (fold + probe + mint +
+        changed mask, one dispatch): only available with the store
+        mirrored on device — with a host store the staged composition
+        (`propagate_level_device`) is the device ceiling."""
+        if not (self._device and self._dstores is not None):
+            return None
+        from .device_maint import resident_level_resolve
+        p0, seg, lab, pid_tgt = self._gather_frontier(j, frontier)
+        out, changed, n_changed, self.next_pid[j] = resident_level_resolve(
+            self._dstores[j], p0, seg, lab, pid_tgt, frontier.size,
+            self.pids[j][frontier], self.next_pid[j], dedup=dedup,
+            bounds=self._frontier_bounds(frontier),
+            cache=self._resident_cache, cache_key=frontier)
+        return out, changed, n_changed
+
+    def propagate_levels_resident(self, frontier: np.ndarray, *,
+                                  dedup: bool = True):
+        """The fused k-loop: one CSR gather feeds every level (the edge
+        index set depends only on the frontier), one stacked upload, one
+        dispatch, one scalar sync — see `resident_levels_resolve`."""
+        if not (self._device and self._dstores is not None):
+            return None
+        from .device_maint import resident_levels_resolve
+        k = len(self.pids) - 1
+        if k == 0:
+            return None
+        idx, seg = _csr_gather(self.out_off, frontier)
+        lab = self.graph.elabel[idx]
+        dst = self.graph.dst[idx]
+        nclean, dirty, next_pid_d = resident_levels_resolve(
+            self._dstores[1:], self.pids[0][frontier], seg, lab,
+            [self.pids[j - 1][dst] for j in range(1, k + 1)],
+            frontier.size,
+            [self.pids[j][frontier] for j in range(1, k + 1)],
+            self.next_pid[1:], dedup=dedup,
+            bounds=self._frontier_bounds(frontier),
+            cache=self._resident_cache, cache_key=frontier)
+        if dirty is not None:
+            self.next_pid[nclean + 1] = next_pid_d
+        return nclean, dirty
 
 
     def parents_of(self, nodes: np.ndarray) -> np.ndarray:
@@ -839,6 +909,31 @@ class BisimMaintainer:
         dedup = self.mode != "multiset"
         frontier = np.unique(frontier0).astype(np.int64)
         always = frontier.copy()  # (j, s) enqueued for every j (line 7-8)
+        # fused k-loop prefix: ONE dispatch resolves every level while
+        # nothing changes; the first change invalidates the later levels'
+        # uploaded target pids and hands back to the per-level ladder
+        nclean, dirty_commit, dt_fused = 0, None, 0.0
+        if self.device and frontier.size \
+                and frontier.size <= self.rebuild_threshold * n:
+            t0 = time.perf_counter()
+            multi = None
+            try:
+                fault_point("device", "level 1")
+                multi = self.backend.propagate_levels_resident(
+                    frontier, dedup=dedup)
+            except InjectedCrash:
+                raise
+            except Exception as exc:
+                warnings.warn(
+                    f"device propagation failed ({exc!r}); degrading "
+                    "to the bit-identical host path", RuntimeWarning)
+                self.device = False
+            if multi is not None:
+                nclean, dirty_commit = multi
+                # amortize the single dispatch over the levels it settled
+                dt_fused = (time.perf_counter() - t0) / max(
+                    nclean + (dirty_commit is not None), 1)
+        fused_until = nclean + (dirty_commit is not None)
         for j in range(1, self.k + 1):
             t0 = time.perf_counter()
             if frontier.size == 0:
@@ -857,11 +952,23 @@ class BisimMaintainer:
                           frontier=int(frontier.size),
                           device=self.device) as lvl_sp:
                 pj = None
-                if self.device:
+                resident = None
+                if j <= nclean:
+                    # settled by the fused k-loop: confirmed unchanged
+                    resident = (None, None, 0)
+                elif j == nclean + 1 and dirty_commit is not None:
+                    resident = dirty_commit
+                    dirty_commit = None
+                elif self.device:
                     try:
                         fault_point("device", f"level {j}")
-                        pj = self.backend.propagate_level_device(
+                        # fallback ladder: device-fused (one dispatch,
+                        # scalar sync) -> device-staged -> host
+                        resident = self.backend.propagate_level_resident(
                             j, frontier, dedup=dedup)
+                        if resident is None:
+                            pj = self.backend.propagate_level_device(
+                                j, frontier, dedup=dedup)
                     except InjectedCrash:
                         raise  # a simulated process death is not degradable
                     except Exception as exc:
@@ -873,28 +980,51 @@ class BisimMaintainer:
                             f"device propagation failed ({exc!r}); degrading "
                             "to the bit-identical host path", RuntimeWarning)
                         self.device = False
-                if pj is None:
-                    hi, lo = self.backend.frontier_signatures(j, frontier,
-                                                              dedup=dedup)
-                    # one bulk resolve of the whole frontier against S_j
-                    pj = self.backend.resolve(j, fuse_key(hi, lo))
-                old = self.backend.pid_at(j, frontier)
-                changed_mask = old != pj
-                self.backend.set_pid_at(j, frontier, pj)
-                changed = frontier[changed_mask]
-                lvl_sp.set(changed=int(changed.size))
-                report.nodes_checked.append(int(frontier.size))
-                report.nodes_changed.append(int(changed.size))
-                report.partitions_touched.append(
-                    int(np.union1d(old[changed_mask],
-                                   pj[changed_mask]).size))
+                        resident = None
+                        pj = None
+                if resident is not None:
+                    # fused level: pid deltas crossed back only if
+                    # something changed; the no-change steady state never
+                    # touches the host pid columns
+                    pj_full, changed_mask, n_changed = resident
+                    if n_changed:
+                        old = self.backend.pid_at(j, frontier)
+                        self.backend.set_pid_at(j, frontier, pj_full)
+                        changed = frontier[changed_mask]
+                        touched = int(np.union1d(
+                            old[changed_mask], pj_full[changed_mask]).size)
+                    else:
+                        changed = frontier[:0]
+                        touched = 0
+                    lvl_sp.set(changed=int(changed.size))
+                    report.nodes_checked.append(int(frontier.size))
+                    report.nodes_changed.append(int(changed.size))
+                    report.partitions_touched.append(touched)
+                else:
+                    if pj is None:
+                        hi, lo = self.backend.frontier_signatures(
+                            j, frontier, dedup=dedup)
+                        # one bulk resolve of the frontier against S_j
+                        pj = self.backend.resolve(j, fuse_key(hi, lo))
+                    old = self.backend.pid_at(j, frontier)
+                    changed_mask = old != pj
+                    self.backend.set_pid_at(j, frontier, pj)
+                    changed = frontier[changed_mask]
+                    lvl_sp.set(changed=int(changed.size))
+                    report.nodes_checked.append(int(frontier.size))
+                    report.nodes_changed.append(int(changed.size))
+                    report.partitions_touched.append(
+                        int(np.union1d(old[changed_mask],
+                                       pj[changed_mask]).size))
                 # propagate to parents of changed nodes (line 20; E_tts)
                 if changed.size and j < self.k:
                     frontier = np.union1d(self.backend.parents_of(changed),
                                           always)
                 else:
                     frontier = always.copy()
-            report.level_seconds.append(time.perf_counter() - t0)
+            report.level_seconds.append(
+                time.perf_counter() - t0
+                + (dt_fused if j <= fused_until else 0.0))
         return report
 
     # ---------------------------------------------------------- change k

@@ -6,15 +6,27 @@ early-stop condition of §3.2/App. A.3 — two consecutive iterations with an
 equal number of partition blocks mean the *full* bisimulation partition has
 been reached — is applied by default.
 
-The whole k-iteration loop is device-resident: one jitted signature->rank
-step (`_bisim_step`) is reused across iterations, the per-level pid arrays
-and signature hash pairs stay on device, and the only host traffic per
-iteration is the scalar partition count (needed for the early-stop test and
-the Table-7 stats). The full pid history — and, with ``with_store=True``,
-the per-level (hi, lo) signature arrays — are fetched in a single transfer
-after the loop. On accelerators the previous-iteration pid buffer is
-donated back to XLA each step, so the loop runs with a constant number of
-N-sized buffers.
+The whole k-iteration loop is device-resident, at one of two fusion
+levels:
+
+* **Fused** (default for ``with_store=False``): the entire build —
+  iteration 0 plus a `lax.while_loop` over iterations 1..k carrying the
+  pid buffer, the (k+1, N) pid history, the per-iteration counts and the
+  convergence iteration — is ONE jitted program.  Early-stop is checked
+  inside the loop body on device, so a converged build performs exactly
+  one dispatch and one device->host sync (the final history fetch).
+* **Staged** (``with_store=True`` builds that must materialize per-level
+  signature arrays, or ``fused=False``): one jitted signature->rank step
+  (`_bisim_step`) is reused across iterations, and the host drains the
+  scalar (count, converged) flags every ``sync_every`` iterations.  On
+  accelerators the previous-iteration pid buffer is donated back to XLA
+  each step, so the loop runs with a constant number of N-sized buffers.
+
+Both arrangements run the same integer ops in the same order, so their pid
+histories and counts are bit-identical (asserted by the parity sweep in
+tests/test_fused_build.py).  Every device->host drain emits a
+``build.sync`` tracer event and every program launch a ``build.dispatch``
+event, so a ``--trace`` run shows the dispatch/sync count per build.
 
 The signature store S is extracted from the already-computed (hi, lo)
 arrays with zero Python loops: each level's store is an array-backed sorted
@@ -33,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.storage import Graph
+from repro.obs import tracer as obs
 from . import signatures as sig
 from .sig_store import SigStore
 
@@ -108,6 +121,54 @@ def _bisim_step(*args, **kwargs):
     return _bisim_step_jit(*args, **kwargs)
 
 
+def _fused_build_impl(node_labels, src, dst, elabel, *, k, num_nodes, mode,
+                      use_kernel, early_stop):
+    """The whole build as one XLA program: iteration 0 + a while_loop over
+    iterations 1..k with the early-stop test evaluated on device.
+
+    The carry is (next iteration j, pid_prev, count_prev, history, counts,
+    converged_at) where history is the fixed-shape (k+1, N) pid buffer and
+    converged_at is -1 until the first iteration whose partition count
+    equals its predecessor's (Prop. 7).  Returns (history, counts,
+    iterations executed, converged_at) — all device arrays, fetched by the
+    caller in a single transfer.
+    """
+    pid0, count0 = _iteration0(node_labels)
+    history = jnp.zeros((k + 1, num_nodes), jnp.int32).at[0].set(pid0)
+    counts = jnp.zeros(k + 1, jnp.int32).at[0].set(count0)
+
+    def cond(carry):
+        j, _pid, _cprev, _hist, _cnts, conv_at = carry
+        running = j <= k
+        if early_stop:
+            running = running & (conv_at < 0)
+        return running
+
+    def body(carry):
+        j, pid_prev, count_prev, hist, cnts, conv_at = carry
+        hi, lo = sig.signature_hashes(
+            pid0, src, dst, elabel, pid_prev, num_nodes=num_nodes,
+            mode=mode, use_kernel=use_kernel)
+        pid_new, count = sig.dense_rank_pairs(hi, lo)
+        hist = jax.lax.dynamic_update_slice(
+            hist, pid_new[None, :], (j, jnp.int32(0)))
+        cnts = cnts.at[j].set(count)
+        conv_at = jnp.where((count == count_prev) & (conv_at < 0),
+                            j, conv_at)
+        return (j + jnp.int32(1), pid_new, count.astype(count_prev.dtype),
+                hist, cnts, conv_at)
+
+    init = (jnp.int32(1), pid0, count0, history, counts, jnp.int32(-1))
+    j_end, _, _, history, counts, conv_at = jax.lax.while_loop(
+        cond, body, init)
+    return history, counts, j_end - jnp.int32(1), conv_at
+
+
+_fused_build = jax.jit(
+    _fused_build_impl,
+    static_argnames=("k", "num_nodes", "mode", "use_kernel", "early_stop"))
+
+
 def bisim_step(pid0, src, dst, elabel, pid_prev, *, num_nodes: int,
                mode: str, use_kernel: bool = False):
     """One fused sig_j -> dense-rank iteration, shared outside the build
@@ -123,31 +184,55 @@ def bisim_step(pid0, src, dst, elabel, pid_prev, *, num_nodes: int,
 
 def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
                 early_stop: bool = True, with_store: bool = False,
-                use_kernel: bool = False, sync_every: int = 2) -> BisimResult:
+                use_kernel: bool = False, sync_every: int = 2,
+                fused: Optional[bool] = None) -> BisimResult:
     """Compute the k-bisimulation partition of `graph`.
 
     mode: 'sorted' (paper-faithful), 'dedup_hash' (exact, cheaper sort) or
           'multiset' (sort-free counting-bisimulation refinement).
 
-    Early-stop checking is batched: each step leaves its partition count
-    and a device-side convergence flag (count_j == count_{j-1}) on device,
-    and the host drains them in one transfer every `sync_every` iterations
-    (default 2 — half the round-trips of a per-iteration scalar sync). Up
-    to `sync_every - 1` extra iterations may be dispatched past the
-    fixpoint; their results are trimmed, so the returned history is
-    identical to a per-iteration check.
+    fused=None (default) picks the fused single-dispatch while_loop build
+    whenever it is applicable (``with_store=False``): the whole loop runs
+    as one XLA program with the early-stop test on device, and the only
+    device->host sync is the final history fetch.  ``fused=False`` forces
+    the staged path; ``fused=True`` with ``with_store=True`` raises,
+    because materializing per-level signature arrays requires the staged
+    loop (the documented fallback ladder: fused -> staged -> host).
+
+    On the staged path, early-stop checking is batched: each step leaves
+    its partition count and a device-side convergence flag
+    (count_j == count_{j-1}) on device, and the host drains them in one
+    transfer every `sync_every` iterations (default 2 — half the
+    round-trips of a per-iteration scalar sync). Up to `sync_every - 1`
+    extra iterations may be dispatched past the fixpoint; their results
+    are trimmed, so the returned history is identical to a per-iteration
+    check — and bit-identical to the fused path.
     """
     if sync_every < 1:
         raise ValueError("sync_every must be >= 1")
+    if fused and with_store:
+        raise ValueError("fused build cannot materialize per-level stores; "
+                         "use the staged sync_every path (fused=None/False)")
     n = graph.num_nodes
     node_labels = jnp.asarray(graph.node_labels)
     src = jnp.asarray(graph.src)
     dst = jnp.asarray(graph.dst)
     elabel = jnp.asarray(graph.elabel)
     esize = max(graph.num_edges, 1)
+    key_bytes = {"sorted": 12, "dedup_hash": 12, "multiset": 0}[mode]
+
+    if fused is None:
+        fused = not with_store
+    if fused:
+        return _build_fused(graph, k, node_labels, src, dst, elabel,
+                            mode=mode, early_stop=early_stop,
+                            use_kernel=use_kernel, n=n, esize=esize,
+                            key_bytes=key_bytes)
 
     t0 = time.perf_counter()
+    obs.event("build.dispatch", path="staged", what="iteration0")
     pid0, count0 = _iteration0(node_labels)
+    obs.event("build.sync", path="staged", what="count0")
     c0 = int(count0)  # host sync point for the timing below
     stats = [IterationStats(0, c0, time.perf_counter() - t0,
                             bytes_sorted=4 * n, bytes_scanned=4 * n)]
@@ -157,7 +242,6 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
 
     # Table-7-style accounting: sorted modes sort E (3 or 2 keys) and N,
     # multiset only scans E and sorts N (for ranking).
-    key_bytes = {"sorted": 12, "dedup_hash": 12, "multiset": 0}[mode]
 
     # First step consumes a copy so donation never consumes pid0, which is
     # also history[0] and the non-donated first argument.
@@ -171,6 +255,8 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
         if not pending:
             return converged_at is not None
         t_sync = time.perf_counter()
+        obs.event("build.sync", path="staged", what="drain",
+                  batched=len(pending))
         host = jax.device_get([(c, f) for _, c, f, _ in pending])
         # The device_get wait is where the batched steps' compute is paid
         # for; amortize it over the drained iterations so per-iteration
@@ -191,6 +277,7 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
     count_prev = count0
     for j in range(1, k + 1):
         t0 = time.perf_counter()
+        obs.event("build.dispatch", path="staged", what="step", iteration=j)
         prev_alias, pid_new, count, hi, lo = _bisim_step(
             pid0, src, dst, elabel, pid_prev, num_nodes=n, mode=mode,
             use_kernel=use_kernel)
@@ -217,6 +304,7 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
         sig_pairs = sig_pairs[:keep - 1]
 
     # Single bulk host transfer of the pid history (+ signatures if stored).
+    obs.event("build.sync", path="staged", what="history")
     pids_host, sig_host = jax.device_get((history, sig_pairs))
     pids = np.stack([np.asarray(p) for p in pids_host])
 
@@ -233,6 +321,43 @@ def build_bisim(graph: Graph, k: int, *, mode: str = "sorted",
         pids=pids, counts=counts, stats=stats,
         converged_at=converged_at, k_requested=k, stores=stores,
         next_pid=next_pid)
+
+
+def _build_fused(graph: Graph, k: int, node_labels, src, dst, elabel, *,
+                 mode: str, early_stop: bool, use_kernel: bool, n: int,
+                 esize: int, key_bytes: int) -> BisimResult:
+    """The single-dispatch build: one program launch, one host sync."""
+    t0 = time.perf_counter()
+    obs.event("build.dispatch", path="fused", what="while_loop", k=k)
+    hist_d, cnts_d, iters_d, conv_d = _fused_build(
+        node_labels, src, dst, elabel, k=k, num_nodes=n, mode=mode,
+        use_kernel=use_kernel, early_stop=early_stop)
+    # THE device->host sync: history, counts and the two loop scalars in
+    # one transfer (build.sync_count == 1 for the whole build).
+    hist, cnts, iters, conv = jax.device_get(
+        (hist_d, cnts_d, iters_d, conv_d))
+    dt = time.perf_counter() - t0
+    iters = int(iters)
+    obs.event("build.sync", path="fused", what="history", iterations=iters)
+
+    converged_at = int(conv) if early_stop and int(conv) >= 0 else None
+    keep = iters + 1  # converged loops stop right after the fixpoint step
+    pids = np.asarray(hist[:keep])
+    counts = [int(c) for c in cnts[:keep]]
+    # The loop ran as one program, so per-iteration wall time is not
+    # observable; amortize the total evenly (sum over stats == wall time,
+    # as on the staged path).  The byte columns use the same formulas.
+    dt_each = dt / keep
+    stats = [IterationStats(0, counts[0], dt_each,
+                            bytes_sorted=4 * n, bytes_scanned=4 * n)]
+    for j in range(1, keep):
+        stats.append(IterationStats(
+            j, counts[j], dt_each,
+            bytes_sorted=key_bytes * esize + 8 * n,
+            bytes_scanned=12 * esize + 8 * n))
+    return BisimResult(
+        pids=pids, counts=counts, stats=stats,
+        converged_at=converged_at, k_requested=k)
 
 
 def partition_blocks(pids: np.ndarray) -> dict:

@@ -172,6 +172,14 @@ def frontier_signature_hashes(pid0: jax.Array, seg: jax.Array,
         slab = elabel[order]
         stgt = pid_tgt[order]
         sval = order < count  # padding sits past `count` in probe order
+        if use_kernel:
+            # set semantics on TPU: device lexsort (above) + the Pallas
+            # fold's in-kernel adjacent-compare dedup (presorted lanes)
+            from repro.kernels import sig_fold as kernel_fold
+            seg_hi, seg_lo = kernel_fold.frontier_sig_fold(
+                slab, stgt, sseg, sval, num_sigs=num_sigs, dedup=True,
+                presorted=True)
+            return hash_triple(seg_hi, seg_lo, pid0)
         keep = jnp.concatenate([
             jnp.ones((1,), bool),
             (sseg[1:] != sseg[:-1]) | (slab[1:] != slab[:-1])

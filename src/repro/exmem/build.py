@@ -116,19 +116,15 @@ class OocBisimResult:
         shutil.rmtree(self.workdir, ignore_errors=True)
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "use_kernel"))
-def _fold_chunk(elabel, pid_tgt, seg, keep, *, num_segments: int,
-                use_kernel: bool = False):
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def _fold_chunk(elabel, pid_tgt, seg, keep, *, num_segments: int):
     """Device fold of one sorted edge chunk: per-edge signature hash pair
-    (the same `hash_pair` lanes the in-memory engine uses; with
-    `use_kernel` routed through the kernels package like
-    `signature_hashes` does) masked by `keep` (dedup/padding), then
-    segment-summed per local source id."""
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        e_hi, e_lo = kernel_ops.edge_hash(elabel, pid_tgt)
-    else:
-        e_hi, e_lo = sig.hash_pair(elabel, pid_tgt)
+    (the same `hash_pair` lanes the in-memory engine uses) masked by
+    `keep` (dedup/padding), then segment-summed per local source id.
+    The jnp reference arrangement; with ``use_kernel`` the streamer
+    routes the whole fold — dedup included — through the Pallas
+    `kernels.sig_fold.chunk_sig_fold` instead."""
+    e_hi, e_lo = sig.hash_pair(elabel, pid_tgt)
     zero = jnp.uint32(0)
     e_hi = jnp.where(keep, e_hi, zero)
     e_lo = jnp.where(keep, e_lo, zero)
@@ -202,13 +198,10 @@ def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
         # the per-chunk device-fold span (the p50/p99 the MetricsReport
         # quotes); closed before the yield
         with obs.span("build.fold", level=level, rows=int(n)):
-            keep = np.ones(n, dtype=bool)
-            if dedup:
-                keep[1:] = ((src[1:] != src[:-1]) | (lab[1:] != lab[:-1])
-                            | (pid[1:] != pid[:-1]))
-                if prev_last is not None:
-                    keep[0] = (int(src[0]), int(lab[0]),
-                               int(pid[0])) != prev_last
+            keep0 = True
+            if dedup and prev_last is not None:
+                keep0 = (int(src[0]), int(lab[0]),
+                         int(pid[0])) != prev_last
             prev_last = (int(src[-1]), int(lab[-1]), int(pid[-1]))
             new_src = np.ones(n, dtype=bool)
             new_src[1:] = src[1:] != src[:-1]
@@ -220,10 +213,26 @@ def _fold_sorted_stream(stream: Iterator[np.ndarray], chunk_edges: int,
                 pid = np.concatenate([pid, np.zeros(pad, np.int32)])
                 seg = np.concatenate(
                     [seg, np.full(pad, chunk_edges - 1, np.int32)])
-                keep = np.concatenate([keep, np.zeros(pad, bool)])
-            hi, lo = _fold_chunk(lab, pid, seg, keep,
-                                 num_segments=chunk_edges,
-                                 use_kernel=use_kernel)
+            if use_kernel:
+                # the Pallas route owns the dedup: only the cross-chunk
+                # boundary bit crosses from the host
+                from repro.kernels.sig_fold import chunk_sig_fold
+                valid = np.zeros(chunk_edges, dtype=bool)
+                valid[:n] = True
+                hi, lo = chunk_sig_fold(
+                    lab, pid, seg, valid,
+                    np.asarray([keep0], dtype=bool),
+                    num_segments=chunk_edges, dedup=dedup)
+            else:
+                keep = np.ones(chunk_edges, dtype=bool)
+                keep[n:] = False
+                if dedup:
+                    keep[1:n] = ((src[1:] != src[:-1])
+                                 | (lab[1:n] != lab[:n - 1])
+                                 | (pid[1:n] != pid[:n - 1]))
+                    keep[0] = keep0
+                hi, lo = _fold_chunk(lab, pid, seg, keep,
+                                     num_segments=chunk_edges)
             u = src_u.shape[0]
             hi_u = np.asarray(hi)[:u]
             lo_u = np.asarray(lo)[:u]

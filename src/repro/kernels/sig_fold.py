@@ -15,6 +15,28 @@ contiguous in the sorted edge table.
 In-kernel the segmented sum is a broadcast-compare reduction
 (nodes_per_block x edges_per_block) on the VPU; hashing is the same
 murmur-style finalizer used everywhere in repro.core.signatures.
+
+Beyond the multiset mode, the kernels cover the paper's set-semantics
+(`sorted`/`dedup_hash`) folds:
+
+  * ``dedup=True`` — duplicate (source, eLabel, pId) triples are dropped
+    *inside the kernel* by an adjacent-compare keep mask.  The blocked
+    layout makes this local: a node's edges never span blocks, so each
+    block's first lane always starts a fresh source and no cross-block
+    carry is needed.  With ``presorted=False`` the block is first sorted
+    in-kernel by a statically-unrolled bitonic network over the triples
+    (the "device segmented sort": padding lanes get source id
+    nodes_per_block and sink to the tail); ``presorted=True`` skips the
+    network for streams the caller already ordered (a device `lexsort`
+    upstream, or the oocore run formation).
+
+  * `chunk_sig_fold` — the oocore per-chunk fold: the sorted run stream
+    arrives (src, eLabel, pId)-ordered with dense ascending local source
+    ids, so the kernel dedups by adjacent compare (the cross-chunk
+    boundary decision arrives as a host scalar), hashes, and segment-
+    combines with a cumulative-sum + binary-searched-boundary reduction
+    — segments here number in the thousands, far past what the
+    broadcast-compare reduction can tile.
 """
 from __future__ import annotations
 
@@ -44,20 +66,76 @@ def _fmix32(h):
     return h
 
 
+def _edge_hash(a, b):
+    """Per-edge hash (VPU, fused with the loads)."""
+    lo = _fmix32(a * _C1 + b * _C2 + _SEED_LO)
+    hi = _fmix32(a * _C3 + b * _C4 + _SEED_HI)
+    return _fmix32(hi + lo * _C5), lo
+
+
+def _lex_lt3(s1, a1, b1, s2, a2, b2):
+    """(s1, a1, b1) < (s2, a2, b2) lexicographically, lane-wise."""
+    return ((s1 < s2)
+            | ((s1 == s2) & ((a1 < a2)
+                             | ((a1 == a2) & (b1 < b2)))))
+
+
+def _bitonic_sort3(s, a, b):
+    """In-kernel bitonic sort of (s, a, b) triples, ascending lex order.
+
+    The network unrolls statically (log^2(L) compare-exchange substages,
+    L = lane count, a power of two); every substage is one vectorized
+    gather + compare + select, so it lowers to pure VPU work.  Equal
+    triples are never exchanged (both lanes keep their own value), which
+    a bitonic network tolerates — equal keys are interchangeable."""
+    L = s.shape[0]
+    assert L & (L - 1) == 0, "bitonic sort needs a power-of-two lane count"
+    idx = jax.lax.broadcasted_iota(jnp.int32, (L,), 0)
+    span = 2
+    while span <= L:
+        half = span >> 1
+        while half >= 1:
+            partner = idx ^ half
+            ps, pa, pb = s[partner], a[partner], b[partner]
+            ascending = (idx & span) == 0
+            self_first = idx < partner
+            take = jnp.where(ascending == self_first,
+                             _lex_lt3(ps, pa, pb, s, a, b),
+                             _lex_lt3(s, a, b, ps, pa, pb))
+            s = jnp.where(take, ps, s)
+            a = jnp.where(take, pa, a)
+            b = jnp.where(take, pb, b)
+            half >>= 1
+        span <<= 1
+    return s, a, b
+
+
 def _kernel(elabel_ref, pid_ref, lsrc_ref, valid_ref, hi_ref, lo_ref, *,
-            nodes_per_block: int):
+            nodes_per_block: int, dedup: bool = False,
+            presorted: bool = False):
     a = elabel_ref[...].astype(jnp.uint32)
     b = pid_ref[...].astype(jnp.uint32)
     valid = valid_ref[...]
-    # per-edge hash (VPU, fused with the loads)
-    lo = _fmix32(a * _C1 + b * _C2 + _SEED_LO)
-    hi = _fmix32(a * _C3 + b * _C4 + _SEED_HI)
-    hi = _fmix32(hi + lo * _C5)
-    zero = np.uint32(0)
-    hi = jnp.where(valid, hi, zero)
-    lo = jnp.where(valid, lo, zero)
-    # segmented sum within the node block: broadcast compare + reduce
     lsrc = lsrc_ref[...]
+    keep = valid
+    if dedup:
+        # set semantics inside the block: a node's edges never span
+        # blocks, so lane 0 always starts a fresh source and the keep
+        # mask needs no cross-block carry
+        sent = jnp.int32(nodes_per_block)
+        s = jnp.where(valid, lsrc, sent)  # padding sinks to the tail
+        if not presorted:
+            s, a, b = _bitonic_sort3(s, a, b)
+            valid = s < sent
+        keep = valid & jnp.concatenate([
+            jnp.ones((1,), bool),
+            (s[1:] != s[:-1]) | (a[1:] != a[:-1]) | (b[1:] != b[:-1])])
+        lsrc = s
+    hi, lo = _edge_hash(a, b)
+    zero = np.uint32(0)
+    hi = jnp.where(keep, hi, zero)
+    lo = jnp.where(keep, lo, zero)
+    # segmented sum within the node block: broadcast compare + reduce
     node_ids = jax.lax.broadcasted_iota(jnp.int32, (nodes_per_block, 1), 0)
     sel = (lsrc[None, :] == node_ids)  # [nb, eb]
     hi_ref[...] = jnp.sum(jnp.where(sel, hi[None, :], zero), axis=1)
@@ -66,21 +144,34 @@ def _kernel(elabel_ref, pid_ref, lsrc_ref, valid_ref, hi_ref, lo_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nodes_per_block", "edges_per_block", "interpret"))
+    static_argnames=("nodes_per_block", "edges_per_block", "interpret",
+                     "dedup", "presorted"))
 def sig_fold(elabel, pid_tgt, local_src, valid, *, nodes_per_block: int,
-             edges_per_block: int, interpret: bool = True):
+             edges_per_block: int, interpret: bool = True,
+             dedup: bool = False, presorted: bool = False):
     """Blocked-CSR segmented signature fold.
 
     elabel/pid_tgt/local_src: int32 [num_blocks * edges_per_block]
     valid: bool  (same shape); local_src is src minus the block's node base.
     Returns (seg_hi, seg_lo): uint32 [num_blocks * nodes_per_block].
+
+    ``dedup=True`` applies the paper's set semantics in-kernel (one
+    survivor per (source, eLabel, pId) triple): the block is bitonically
+    sorted first unless ``presorted`` promises the lanes already arrive
+    in (local_src, eLabel, pId) order with padding at the block tail.
+    The unsorted dedup route needs a power-of-two ``edges_per_block``
+    (the bitonic network's lane count).
     """
     e = elabel.shape[0]
     assert e % edges_per_block == 0
+    if dedup and not presorted:
+        assert edges_per_block & (edges_per_block - 1) == 0, \
+            "in-kernel sort needs power-of-two edges_per_block"
     num_blocks = e // edges_per_block
     grid = (num_blocks,)
     eb, nb = edges_per_block, nodes_per_block
-    kern = functools.partial(_kernel, nodes_per_block=nb)
+    kern = functools.partial(_kernel, nodes_per_block=nb, dedup=dedup,
+                             presorted=presorted)
     hi, lo = pl.pallas_call(
         kern,
         grid=grid,
@@ -103,20 +194,125 @@ def sig_fold(elabel, pid_tgt, local_src, valid, *, nodes_per_block: int,
     return hi, lo
 
 
-@functools.partial(jax.jit, static_argnames=("num_sigs", "interpret"))
+@functools.partial(jax.jit, static_argnames=("num_sigs", "interpret",
+                                             "dedup", "presorted"))
 def frontier_sig_fold(elabel, pid_tgt, seg, valid, *, num_sigs: int,
-                      interpret: bool = True):
+                      interpret: bool = True, dedup: bool = False,
+                      presorted: bool = True):
     """Maintenance frontier fold: one single-block `sig_fold` call.
 
     A gathered frontier batch is already a blocked-CSR block of its own —
     `seg` plays local_src (padded entries carry seg >= num_sigs, matching
     no node row), the batch length is the edge budget, and the whole fold
     is one grid step.  Used by `core.signatures.frontier_signature_hashes`
-    for the multiset (no-dedup) mode when kernels are requested.
+    for both the multiset mode and — with ``dedup=True`` after the device
+    lexsort ordered the batch — the set-semantics modes, when kernels are
+    requested.
 
     elabel/pid_tgt/seg: int-typed [E]; valid bool [E].
     Returns (seg_hi, seg_lo) u32 [num_sigs].
     """
     return sig_fold(elabel, pid_tgt, seg.astype(jnp.int32), valid,
                     nodes_per_block=num_sigs,
-                    edges_per_block=elabel.shape[0], interpret=interpret)
+                    edges_per_block=elabel.shape[0], interpret=interpret,
+                    dedup=dedup, presorted=presorted)
+
+
+def _chunk_kernel(elabel_ref, pid_ref, seg_ref, valid_ref, keep0_ref,
+                  hi_ref, lo_ref, *, num_segments: int, dedup: bool):
+    a = elabel_ref[...].astype(jnp.uint32)
+    b = pid_ref[...].astype(jnp.uint32)
+    seg = seg_ref[...]
+    valid = valid_ref[...]
+    e = seg.shape[0]
+    keep = valid
+    if dedup:
+        # the stream is (src, eLabel, pId)-sorted; the chunk's first lane
+        # may continue the previous chunk's last triple — the host passes
+        # that one-bit decision in (`keep0`)
+        keep = valid & jnp.concatenate([
+            keep0_ref[...][:1],
+            (seg[1:] != seg[:-1]) | (a[1:] != a[:-1]) | (b[1:] != b[:-1])])
+    hi, lo = _edge_hash(a, b)
+    zero = np.uint32(0)
+    hi = jnp.where(keep, hi, zero)
+    lo = jnp.where(keep, lo, zero)
+    # segment combine: segments number in the thousands here, so the
+    # broadcast-compare reduction is out; contiguous ascending segments
+    # turn it into a cumulative sum + two binary-searched boundary
+    # gathers per output lane (wrap-subtraction of u32 running sums is
+    # exactly the segment's wrap-add total)
+    cs_hi = jnp.cumsum(hi, dtype=hi.dtype)
+    cs_lo = jnp.cumsum(lo, dtype=lo.dtype)
+    sid = jax.lax.broadcasted_iota(jnp.int32, (num_segments,), 0)
+
+    def bounds_of(leq):
+        lo_b = jnp.zeros((num_segments,), jnp.int32)
+        hi_b = jnp.full((num_segments,), e, jnp.int32)
+
+        def body(_, st):
+            lo_b, hi_b = st
+            cont = lo_b < hi_b
+            mid = (lo_b + hi_b) >> 1
+            v = seg[mid]
+            less = (v <= sid) if leq else (v < sid)
+            return (jnp.where(cont & less, mid + 1, lo_b),
+                    jnp.where(cont & ~less, mid, hi_b))
+
+        lo_b, _ = jax.lax.fori_loop(0, int(e).bit_length(), body,
+                                    (lo_b, hi_b))
+        return lo_b
+
+    left = bounds_of(leq=False)   # first lane with seg >= sid
+    right = bounds_of(leq=True)   # first lane with seg > sid
+    has = right > left
+    up_hi = cs_hi[jnp.maximum(right - 1, 0)]
+    up_lo = cs_lo[jnp.maximum(right - 1, 0)]
+    base_hi = jnp.where(left > 0, cs_hi[jnp.maximum(left - 1, 0)], zero)
+    base_lo = jnp.where(left > 0, cs_lo[jnp.maximum(left - 1, 0)], zero)
+    hi_ref[...] = jnp.where(has, up_hi - base_hi, zero)
+    lo_ref[...] = jnp.where(has, up_lo - base_lo, zero)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "dedup", "interpret"))
+def chunk_sig_fold(elabel, pid_tgt, seg, valid, keep0, *,
+                   num_segments: int, dedup: bool = True,
+                   interpret: bool = True):
+    """Oocore per-chunk fold: in-kernel dedup + hash + segment combine.
+
+    One sorted-run chunk per call: `seg` holds dense ascending local
+    source ids (the cumsum of new-source flags the streamer computes to
+    extract `src_unique` anyway), `valid` masks the tail padding, and
+    `keep0` (bool [1]) is the host's cross-chunk boundary decision —
+    False when the chunk's first triple equals the previous chunk's
+    last.  Bit-identical to the host keep-mask + `_fold_chunk`
+    composition in `repro.exmem.build` (asserted by tests).
+
+    elabel/pid_tgt/seg: int32 [E]; valid bool [E]; keep0 bool [1].
+    Returns (seg_hi, seg_lo) u32 [num_segments].
+    """
+    e = elabel.shape[0]
+    kern = functools.partial(_chunk_kernel, num_segments=num_segments,
+                             dedup=dedup)
+    hi, lo = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_segments,), jnp.uint32),
+            jax.ShapeDtypeStruct((num_segments,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(elabel, pid_tgt, seg.astype(jnp.int32), valid, keep0)
+    return hi, lo

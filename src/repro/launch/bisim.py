@@ -110,6 +110,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "resolve) on device — bit-identical to the host "
                          "path, reported per level")
     ap.add_argument("--no-early-stop", action="store_true")
+    ap.add_argument("--sync-every", type=int, default=None, metavar="N",
+                    help="force the STAGED single-device build, draining "
+                         "convergence scalars every N iterations; default "
+                         "is the fused while_loop build (one dispatch, "
+                         "one sync — count them with --trace)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run "
                          "to PATH and print the aggregated phase table "
@@ -318,8 +323,13 @@ def _dispatch(args) -> None:
                 g, args.k, mode=args.mode, ranking=args.ranking,
                 early_stop=not args.no_early_stop)
         else:
-            res = build_bisim(g, args.k, mode=args.mode,
-                              early_stop=not args.no_early_stop)
+            if args.sync_every is not None:
+                res = build_bisim(g, args.k, mode=args.mode,
+                                  early_stop=not args.no_early_stop,
+                                  fused=False, sync_every=args.sync_every)
+            else:
+                res = build_bisim(g, args.k, mode=args.mode,
+                                  early_stop=not args.no_early_stop)
     dt = time.perf_counter() - t0
     print(f"k={args.k} mode={args.mode} {engine}")
     for st in res.stats:

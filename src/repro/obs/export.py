@@ -172,12 +172,16 @@ class MetricsReport:
     def __init__(self, phases: Optional[Dict[str, dict]] = None,
                  levels: Optional[Dict[int, Dict[str, float]]] = None,
                  span_count: int = 0, event_count: int = 0,
-                 dropped: int = 0):
+                 dropped: int = 0,
+                 events: Optional[Dict[str, int]] = None):
         self.phases = phases or {}
         self.levels = levels or {}
         self.span_count = span_count
         self.event_count = event_count
         self.dropped = dropped
+        # instant-event counts per name (e.g. build.sync / build.dispatch:
+        # the device round-trip counters the fused-loop work is judged by)
+        self.events = events or {}
 
     @classmethod
     def from_tracer(cls, tracer: Tracer) -> "MetricsReport":
@@ -196,11 +200,15 @@ class MetricsReport:
                    "p99_ms": _percentile(d, 99)}
             for name, d in durs.items()
         }
+        event_counts: Dict[str, int] = defaultdict(int)
+        for rec in tracer.events:
+            event_counts[rec["name"]] += 1
         return cls(phases,
                    {lvl: dict(names) for lvl, names in levels.items()},
                    span_count=len(tracer.spans),
                    event_count=len(tracer.events),
-                   dropped=tracer.dropped)
+                   dropped=tracer.dropped,
+                   events=dict(event_counts))
 
     def as_dict(self) -> dict:
         return {
@@ -208,6 +216,7 @@ class MetricsReport:
                        for name, stats in sorted(self.phases.items())},
             "levels": {str(lvl): {n: s for n, s in sorted(names.items())}
                        for lvl, names in sorted(self.levels.items())},
+            "events": {name: n for name, n in sorted(self.events.items())},
             "span_count": self.span_count,
             "event_count": self.event_count,
             "dropped": self.dropped,
@@ -229,6 +238,8 @@ class MetricsReport:
             mine = self.levels.setdefault(lvl, {})
             for name, sec in names.items():
                 mine[name] = mine.get(name, 0.0) + sec
+        for name, cnt in other.events.items():
+            self.events[name] = self.events.get(name, 0) + cnt
         self.span_count += other.span_count
         self.event_count += other.event_count
         self.dropped += other.dropped
@@ -248,6 +259,10 @@ class MetricsReport:
             lines.append(f"  {name:<28} {st['count']:>7d} "
                          f"{st['total_s']:>9.3f} {st['p50_ms']:>9.3f} "
                          f"{st['p99_ms']:>9.3f}")
+        if self.events:
+            cells = " ".join(f"{name}={cnt}" for name, cnt in
+                             sorted(self.events.items()))
+            lines.append(f"events: {cells}")
         if self.levels:
             lines.append("per level:")
             for lvl in sorted(self.levels):
