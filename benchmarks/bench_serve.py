@@ -1,0 +1,110 @@
+"""Quotient serving: query latency/throughput vs wave width, with and
+without a concurrent maintenance stream.
+
+For each engine batch width B the same pool of label-path queries runs
+through the fixed-slot wave evaluator; B=1 is the unbatched baseline
+(one dispatch per query).  The ``updates`` rows interleave
+`QuotientService.add_edges` batches with the query stream, so the
+latencies include epoch churn (patch + device-array swap).  The JSON
+payload records p50/p99 per batch call, end-to-end qps, and the
+batched-vs-unbatched speedup at the widest wave.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BisimMaintainer
+from repro.graph import generators as gen
+from repro.quotient import LabelPath, QuotientService
+
+BATCHES = (1, 16, 128)
+K = 6
+
+
+def _query_pool(g, rng, size: int):
+    """Realizable label paths (random-walk sampled) of mixed lengths,
+    all answered at level K so wide waves share hop programs."""
+    pool = []
+    while len(pool) < size:
+        length = int(rng.integers(1, 4))
+        cur = int(rng.integers(g.num_nodes))
+        labs = []
+        for _ in range(length):
+            out = np.flatnonzero(g.src == cur)
+            if out.size == 0:
+                labs = None
+                break
+            e = int(rng.choice(out))
+            labs.append(int(g.elabel[e]))
+            cur = int(g.dst[e])
+        if labs:
+            pool.append(LabelPath(tuple(labs), level=K))
+    return pool
+
+
+def _drain(engine, pool, batch: int, *, service=None, rng=None,
+           update_every: int = 4, update_size: int = 8):
+    """Run the pool through the engine in `batch`-sized calls; with
+    `service`, absorb an edge batch every `update_every` calls (the
+    concurrent-maintenance arrangement)."""
+    lat = []
+    total = 0
+    t_all = time.perf_counter()
+    for i, s in enumerate(range(0, len(pool), batch)):
+        chunk = pool[s:s + batch]
+        if service is not None and i % update_every == 0:
+            n = service.m.backend.num_nodes
+            service.add_edges(
+                rng.integers(0, n, update_size).astype(np.int32),
+                rng.integers(0, 3, update_size).astype(np.int32),
+                rng.integers(0, n, update_size).astype(np.int32))
+        t0 = time.perf_counter()
+        engine.query(chunk)
+        lat.append(time.perf_counter() - t0)
+        total += len(chunk)
+    wall = time.perf_counter() - t_all
+    lat_ms = np.sort(np.array(lat)) * 1e3
+    return {
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "qps": total / wall,
+        "us_per_query": wall * 1e6 / total,
+        "calls": len(lat),
+    }
+
+
+def run(scale: int = 1):
+    rng = np.random.default_rng(7)
+    g = gen.powerlaw_graph(2_000 * scale, 8_000 * scale, 4, 3, seed=0)
+    m = BisimMaintainer(g, K, mode="sorted")
+    svc = QuotientService(m, tempfile.mkdtemp(prefix="bench-serve-"))
+    pool = _query_pool(m.graph, rng, 256)
+
+    rows, qps = [], {}
+    for b in BATCHES:
+        svc.engine.max_batch = b
+        svc.engine.query(pool[:b])        # warm the hop programs
+        r = _drain(svc.engine, pool, b)
+        qps[b] = r["qps"]
+        rows.append((f"serve/batch={b}", r["us_per_query"],
+                     f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+                     f"qps={r['qps']:.0f};calls={r['calls']}"))
+    for b in BATCHES:
+        svc.engine.max_batch = b
+        r = _drain(svc.engine, pool, b, service=svc, rng=rng)
+        rows.append((f"serve/updates/batch={b}", r["us_per_query"],
+                     f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+                     f"qps={r['qps']:.0f};epoch={svc.epoch};"
+                     f"patches={svc.patches}"))
+    widest = max(BATCHES)
+    speedup = qps[widest] / qps[1]
+    rows.append((f"serve/batched_speedup@{widest}", 0.0,
+                 f"qps_ratio={speedup:.2f};batched_wins={speedup >= 1.0}"))
+    assert speedup >= 1.0, (
+        f"batched serving ({qps[widest]:.0f} qps at B={widest}) fell "
+        f"behind unbatched ({qps[1]:.0f} qps)")
+    return rows, {"batched_speedup": round(speedup, 2),
+                  "epochs_absorbed": svc.epoch}

@@ -315,6 +315,31 @@ class MaintenanceBackend(abc.ABC):
         """Drop the rows where ~keep from N_t, E_t and every pid level,
         remapping edge endpoints with the (monotone) `remap`."""
 
+    def out_edges_of(self, nodes: np.ndarray):
+        """(src, elabel, dst) of every out-edge of the sorted-unique
+        `nodes`, in the canonical (src, elabel, dst) order — the gather
+        the quotient service patches touched blocks' rows from.
+        Backends override with their E_tst index; this fallback filters
+        `incident_edges` per node."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        srcs, labs, dsts = [], [], []
+        for nid in nodes.tolist():
+            s, l, t = self.incident_edges(int(nid))
+            m = s == nid
+            srcs.append(s[m])
+            labs.append(l[m])
+            dsts.append(t[m])
+        if not srcs:
+            e = np.empty(0, np.int32)
+            return e, e.copy(), e.copy()
+        return (np.concatenate(srcs), np.concatenate(labs),
+                np.concatenate(dsts))
+
+    def node_labels_of(self, nodes: np.ndarray) -> np.ndarray:
+        """Node labels of the given (sorted) node ids."""
+        return np.asarray(self.graph.node_labels)[
+            np.asarray(nodes, dtype=np.int64)]
+
     # -------------------------------------------------------------- change k
     @abc.abstractmethod
     def truncate_k(self, new_k: int) -> None:
@@ -558,6 +583,15 @@ class InMemoryBackend(MaintenanceBackend):
         idx, _ = _csr_gather(self.in_off, nodes)
         return np.unique(self.graph.src[self.in_ord[idx]]).astype(np.int64)
 
+    def out_edges_of(self, nodes: np.ndarray):
+        idx, _ = _csr_gather(self.out_off,
+                             np.asarray(nodes, dtype=np.int64))
+        g = self.graph
+        return g.src[idx], g.elabel[idx], g.dst[idx]
+
+    def node_labels_of(self, nodes: np.ndarray) -> np.ndarray:
+        return self.graph.node_labels[np.asarray(nodes, dtype=np.int64)]
+
     def incident_edges(self, nid: int):
         g = self.graph
         mask = (g.src == nid) | (g.dst == nid)
@@ -679,6 +713,12 @@ class BisimMaintainer:
         self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
         self.backend.build(k, mode, result=result)
         self.device = bool(device) and self.backend.enable_device()
+        # per-level changed-node sets of the LAST update (index j = nodes
+        # whose pId_j changed, 0..k); None = "assume everything changed"
+        # (fresh build, §4.2 rebuild, compact, change_k).  The quotient
+        # service reads this to patch touched blocks instead of
+        # rematerializing.
+        self.last_changed = None
 
     # ------------------------------------------------------------ durability
     @contextlib.contextmanager
@@ -819,6 +859,9 @@ class BisimMaintainer:
             for j in range(1, self.k + 1):
                 self.backend.append_pid_rows(j,
                                              self.backend.resolve(j, keys))
+            # every level gained pid rows for the new ids
+            ids64 = np.asarray(new_ids, dtype=np.int64)
+            self.last_changed = [ids64.copy() for _ in range(self.k + 1)]
         return new_ids
 
     # ------------------------------------------------------- ADD_EDGE(S)
@@ -877,10 +920,13 @@ class BisimMaintainer:
         remap = np.cumsum(~dead, dtype=np.int64) - 1
         remap[dead] = -1
         if not dead.any():
+            empty = np.empty(0, dtype=np.int64)
+            self.last_changed = [empty.copy() for _ in range(self.k + 1)]
             return remap
         with self._logged("compact"):
             self.backend.compact(~dead, remap)
             self._tombstone = np.zeros(self.backend.num_nodes, dtype=bool)
+            self.last_changed = None  # node ids moved: everything changed
         return remap
 
     @property
@@ -906,6 +952,8 @@ class BisimMaintainer:
     def _propagate_inner(self, frontier0: np.ndarray) -> MaintenanceReport:
         n = self.backend.num_nodes
         report = MaintenanceReport([], [], [], device=self.device)
+        # pId_0 never moves under edge updates; levels 1..k fill in below
+        changed_levels = [np.empty(0, dtype=np.int64)]
         dedup = self.mode != "multiset"
         frontier = np.unique(frontier0).astype(np.int64)
         always = frontier.copy()  # (j, s) enqueued for every j (line 7-8)
@@ -941,12 +989,14 @@ class BisimMaintainer:
                 report.nodes_changed.append(0)
                 report.partitions_touched.append(0)
                 report.level_seconds.append(0.0)
+                changed_levels.append(np.empty(0, dtype=np.int64))
                 continue
             if frontier.size > self.rebuild_threshold * n:
                 # §4.2 heuristic: most nodes queued -> full rebuild is cheaper
                 with obs.span("maint.rebuild", level=j):
                     self.backend.build(self.k, self.mode)
                 report.rebuilt = True
+                self.last_changed = None  # rebuild re-ranks every level
                 return self._pad_report(report)
             with obs.span("maint.level", level=j,
                           frontier=int(frontier.size),
@@ -1016,6 +1066,7 @@ class BisimMaintainer:
                     report.partitions_touched.append(
                         int(np.union1d(old[changed_mask],
                                        pj[changed_mask]).size))
+                changed_levels.append(np.asarray(changed, dtype=np.int64))
                 # propagate to parents of changed nodes (line 20; E_tts)
                 if changed.size and j < self.k:
                     frontier = np.union1d(self.backend.parents_of(changed),
@@ -1025,6 +1076,7 @@ class BisimMaintainer:
             report.level_seconds.append(
                 time.perf_counter() - t0
                 + (dt_fused if j <= fused_until else 0.0))
+        self.last_changed = changed_levels
         return report
 
     # ---------------------------------------------------------- change k
@@ -1038,3 +1090,4 @@ class BisimMaintainer:
             else:
                 self.backend.extend_k(new_k, self.mode)
             self.k = new_k
+            self.last_changed = None  # the level ladder itself moved

@@ -524,6 +524,29 @@ class OocBackend(MaintenanceBackend):
         cat = (np.concatenate(rows) if rows else np.empty(0, TST_DTYPE))
         return cat["src"], cat["elabel"], cat["dst"]
 
+    def out_edges_of(self, nodes: np.ndarray):
+        # one E_tst scan instead of the ABC's per-node incident_edges loop
+        ids = np.unique(np.asarray(nodes, dtype=np.int64))
+        if ids.size == 0:
+            e = np.empty(0, np.int32)
+            return e, e.copy(), e.copy()
+        edges = self._frontier_out_edges(ids)
+        return edges["src"], edges["elabel"], edges["dst"]
+
+    def node_labels_of(self, nodes: np.ndarray) -> np.ndarray:
+        ids = np.asarray(nodes, dtype=np.int64)
+        if ids.size == 0:
+            return np.empty(0, dtype=np.int32)
+        order = np.argsort(ids, kind="stable")
+        srt = ids[order]
+        out = np.empty(ids.shape[0], np.int32)
+        for base, labels in self.ooc.iter_nodes(self.io):
+            lo = np.searchsorted(srt, base)
+            hi = np.searchsorted(srt, base + labels.shape[0])
+            if hi > lo:
+                out[order[lo:hi]] = labels[srt[lo:hi] - base]
+        return out
+
     # ------------------------------------------------------------ mutations
     def add_node_rows(self, labels: np.ndarray) -> int:
         return self.ooc.append_nodes(labels, stats=self.io)

@@ -17,6 +17,15 @@ disk-resident `OocBackend`).
     PYTHONPATH=src python -m repro.launch.bisim --oocore \
         --generator random --nodes 5000 --k 4 compact --delete-nodes 3,7,11
 
+Quotient serving (repro.quotient): `materialize` persists the per-level
+quotient graphs + extents, `query` answers structural queries over them
+(optionally absorbing update batches live):
+
+    PYTHONPATH=src python -m repro.launch.bisim --generator structured \
+        --nodes 9000 --k 5 materialize --quotient-dir /tmp/q
+    PYTHONPATH=src python -m repro.launch.bisim --generator structured \
+        --nodes 9000 --k 5 query --path 0:1 --point 7 --update 8
+
 Durability: `--checkpoint --workdir DIR` makes the oocore build write a
 per-level checkpoint (add `--resume` to continue a killed build from the
 last finished level); `--wal --workdir DIR` runs the maintenance
@@ -53,6 +62,23 @@ def make_graph(args) -> Graph:
     if args.generator == "dworst":
         return gen.complete_graph(args.nodes)
     raise SystemExit(f"unknown generator {args.generator}")
+
+
+# Global flags that apply to every subcommand but are declared on the
+# top-level parser (argparse only shows them under the bare --help), so
+# each subparser repeats them in its epilog — the parser-contract test
+# in tests/test_launcher.py keeps this list and the flags in sync.
+_SHARED_EPILOG = """\
+shared flags (pass them BEFORE the subcommand):
+  --trace PATH          write a Chrome-trace JSON of the whole run and
+                        print the aggregated per-phase table
+  --wal-group N         WAL group-commit size (records per fsync; used
+                        with --wal --workdir)
+  --sync-every N        force the STAGED single-device build, draining
+                        convergence scalars every N iterations
+  --device-maintenance  run update propagation on device (bit-identical
+                        to the host path)
+"""
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -124,31 +150,65 @@ def build_parser() -> argparse.ArgumentParser:
                          "array, or per-level 'pids_<j>' members with "
                          "--oocore (never materializes the full history)")
     sub = ap.add_subparsers(
-        dest="cmd", metavar="{add-edges,delete-node,compact,recover}",
-        help="maintenance subcommands: build the partition, apply one "
-             "update through BisimMaintainer (in-memory, or OocBackend "
-             "with --oocore), report per-level propagation + I/O")
-    ap_add = sub.add_parser("add-edges",
-                            help="insert edges and propagate (Alg. 4)")
+        dest="cmd",
+        metavar="{add-edges,delete-node,compact,recover,materialize,query}",
+        help="subcommands: apply one update through BisimMaintainer "
+             "(in-memory, or OocBackend with --oocore), recover a "
+             "crashed workdir, or materialize/query the quotient "
+             "artifact (repro.quotient)")
+
+    def _sub(name, help):
+        return sub.add_parser(
+            name, help=help, epilog=_SHARED_EPILOG,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
+
+    ap_add = _sub("add-edges", "insert edges and propagate (Alg. 4)")
     ap_add.add_argument("--count", type=int, default=1,
                         help="number of random edges to insert")
     ap_add.add_argument("--edge", action="append", default=[],
                         metavar="S:L:T",
                         help="explicit src:elabel:dst edge (repeatable; "
                              "overrides --count)")
-    ap_del = sub.add_parser("delete-node",
-                            help="DELETE_NODE: drop incident edges, "
+    ap_del = _sub("delete-node", "DELETE_NODE: drop incident edges, "
                                  "tombstone the row")
     ap_del.add_argument("--nid", type=int, required=True)
-    ap_cmp = sub.add_parser("compact",
-                            help="drop tombstoned rows, remap ids "
-                                 "densely")
+    ap_cmp = _sub("compact", "drop tombstoned rows, remap ids densely")
     ap_cmp.add_argument("--delete-nodes", default="", metavar="I,J,...",
                         help="tombstone these nodes first")
-    sub.add_parser("recover",
-                   help="re-open a crashed --wal workdir: restore the "
-                        "last snapshot (checksum-verified) and replay "
-                        "the committed WAL tail")
+    _sub("recover",
+         "re-open a crashed --wal workdir: restore the last snapshot "
+         "(checksum-verified) and replay the committed WAL tail")
+    ap_mat = _sub("materialize",
+                  "build the partition and persist the per-level "
+                  "quotient graphs + extents (repro.quotient)")
+    ap_mat.add_argument("--quotient-dir", required=True,
+                        help="artifact directory (overwritten)")
+    ap_qry = _sub("query",
+                  "serve structural queries over the quotient: load an "
+                  "existing --quotient-dir read-only, or build + "
+                  "materialize first; --update streams maintenance "
+                  "batches through the live service between queries")
+    ap_qry.add_argument("--quotient-dir", default=None,
+                        help="load this artifact read-only (no --update) "
+                             "instead of building one")
+    ap_qry.add_argument("--path", action="append", default=[],
+                        metavar="L:L:...",
+                        help="label-path query, colon-separated edge "
+                             "labels (repeatable)")
+    ap_qry.add_argument("--level", type=int, default=None,
+                        help="quotient level to answer at (default: "
+                             "path length)")
+    ap_qry.add_argument("--point", action="append", default=[], type=int,
+                        metavar="NID",
+                        help="pId/block-size lookup for this node "
+                             "(repeatable)")
+    ap_qry.add_argument("--update", type=int, default=0, metavar="N",
+                        help="apply N random edge inserts through the "
+                             "live QuotientService, then re-query at "
+                             "the new epoch")
+    ap_qry.add_argument("--batch", type=int, default=64,
+                        help="engine wave width (fixed slots per "
+                             "dispatch)")
     return ap
 
 
@@ -291,13 +351,140 @@ def run_maintenance(args, g: Graph) -> None:
             backend.close()
 
 
+def _make_maintainer(args, g: Graph):
+    """Build a `BisimMaintainer` from the engine flags (shared by the
+    maintenance and quotient subcommands)."""
+    from repro.core import BisimMaintainer
+
+    if args.distributed:
+        raise SystemExit(
+            "this subcommand supports the single and --oocore engines "
+            "(the distributed builder keeps no store)")
+    if args.oocore:
+        from repro.exmem import OocBackend
+        backend = OocBackend(
+            g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
+            spill_threshold=args.spill_threshold, workdir=args.workdir,
+            io_threads=_io_threads(args), prefetch_depth=args.prefetch_depth,
+            wal=args.wal, wal_group=args.wal_group)
+        return BisimMaintainer(backend, args.k, mode=args.mode,
+                               device=args.device_maintenance,
+                               wal=args.wal), backend
+    return BisimMaintainer(g, args.k, mode=args.mode,
+                           device=args.device_maintenance), None
+
+
+def run_materialize(args, g: Graph) -> None:
+    from repro.exmem.runs import IOStats
+    from repro.quotient import materialize_quotient
+
+    t0 = time.perf_counter()
+    m, backend = _make_maintainer(args, g)
+    print(f"initial build: {time.perf_counter() - t0:.2f}s")
+    t0 = time.perf_counter()
+    io = IOStats()
+    index = materialize_quotient(
+        backend.ooc if backend is not None else g, m.backend,
+        args.quotient_dir, counts=[int(x) for x in m.next_pid],
+        mode=m.mode, stats=io, overwrite=True)
+    dt = time.perf_counter() - t0
+    for j in range(1, index.k + 1):
+        print(f"  Q_{j}: {index.counts[j]} blocks, "
+              f"{index.levels[j].num_edges} edges")
+    print(MetricsReport.format_io(
+        io.as_dict(), label="materialize io",
+        fields=["sort_cost", "scan_cost", "sort_bytes", "scan_bytes"]))
+    print(f"materialized {args.quotient_dir} in {dt:.2f}s "
+          f"(k={index.k}, mode={index.mode}, epoch={index.epoch})")
+    if backend is not None and not args.workdir:
+        backend.close()
+
+
+def run_query(args) -> None:
+    import os
+
+    import numpy as np
+
+    from repro.quotient import (LabelPath, PointLookup, QuotientEngine,
+                                QuotientIndex, QuotientService)
+
+    paths = [tuple(int(x) for x in p.split(":")) for p in args.path]
+    svc = None
+    if args.quotient_dir and os.path.exists(
+            os.path.join(args.quotient_dir, "manifest.json")):
+        if args.update:
+            raise SystemExit("--update needs a live service; drop "
+                             "--quotient-dir to build one")
+        index = QuotientIndex.load(args.quotient_dir, verify=True)
+        engine = QuotientEngine(index, max_batch=args.batch)
+        print(f"loaded {args.quotient_dir}: k={index.k} "
+              f"mode={index.mode} epoch={index.epoch}")
+    else:
+        g = make_graph(args)
+        print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
+        t0 = time.perf_counter()
+        m, backend = _make_maintainer(args, g)
+        import tempfile
+        workdir = args.workdir or tempfile.mkdtemp(prefix="quotient-")
+        svc = QuotientService(m, workdir, max_batch=args.batch)
+        engine, index = svc.engine, svc.index
+        print(f"build + materialize: {time.perf_counter() - t0:.2f}s "
+              f"(epoch {svc.epoch})")
+
+    queries = [LabelPath(p, level=args.level) for p in paths]
+    queries += [PointLookup(nid, index.k) for nid in args.point]
+    if not queries:
+        queries = [PointLookup(0, index.k)]
+
+    def _report(answers):
+        for q, a in zip(queries, answers):
+            if isinstance(q, PointLookup):
+                print(f"  point {q.node}@{q.level}: pid={a.pid} "
+                      f"block_size={a.block_size}")
+            else:
+                head = ",".join(str(x) for x in a[:8])
+                more = "..." if a.shape[0] > 8 else ""
+                print(f"  path {q.labels}: {a.shape[0]} nodes "
+                      f"[{head}{more}]")
+
+    t0 = time.perf_counter()
+    answers = engine.query(queries)
+    print(f"epoch {engine.epoch}: {len(queries)} queries "
+          f"in {(time.perf_counter() - t0) * 1e3:.1f} ms "
+          f"({engine.stats['waves']} waves, {engine.stats['hops']} hops)")
+    _report(answers)
+    if args.update and svc is not None:
+        rng = np.random.default_rng(args.seed)
+        n = svc.m.backend.num_nodes
+        src = rng.integers(0, n, args.update).astype(np.int32)
+        dst = rng.integers(0, n, args.update).astype(np.int32)
+        lab = rng.integers(0, 4, args.update).astype(np.int32)
+        t0 = time.perf_counter()
+        svc.add_edges(src, lab, dst)
+        print(f"absorbed {args.update} edge inserts in "
+              f"{(time.perf_counter() - t0) * 1e3:.1f} ms "
+              f"(patches={svc.patches}, "
+              f"rematerializations={svc.rematerializations})")
+        answers = svc.query(queries)
+        print(f"epoch {svc.engine.epoch}:")
+        _report(answers)
+
+
 def _dispatch(args) -> None:
     if args.cmd == "recover":
         with obs.span("launch.recover"):
             run_recover(args)  # no graph: state comes from the workdir
         return
+    if args.cmd == "query":
+        with obs.span("launch.query"):
+            run_query(args)  # loads its own graph/artifact
+        return
     g = make_graph(args)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
+    if args.cmd == "materialize":
+        with obs.span("launch.materialize"):
+            run_materialize(args, g)
+        return
     if args.cmd:
         with obs.span("launch.update", cmd=args.cmd):
             run_maintenance(args, g)

@@ -1,0 +1,140 @@
+"""Fixed-slot batched quotient query evaluator — the `serve/engine.py`
+wave idiom applied to structural queries.
+
+Path queries are bucketed by (level, hop count): every query in a
+bucket walks the same level ladder, so a wave of up to ``max_batch``
+of them shares ONE jitted dispatch per hop (a [B, n_blocks] block mask
+advanced by a scatter-max over the level's device-resident edge
+triples) and ONE device->host sync per wave (the final mask fetch).
+Padding slots carry the WANT_NONE sentinel label, which matches no
+block.  Point lookups never touch the device: they are host
+`searchsorted` over the extent runs.
+
+The compiled-program cache is keyed by the level shapes, so a steady
+artifact compiles O(k) hop programs once; a maintenance patch that
+changes a level's edge count recompiles that level's hop only.
+
+Engine answers are bit-identical to `queries.eval_ref`: both compute
+the same boolean masks (the device scatter-max is exact on bools) and
+share `expand_blocks` for the mask -> node-id step — asserted by the
+differential tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import tracer as obs
+
+from .queries import (WANT_ALL, WANT_NONE, PointLookup, expand_blocks,
+                      normalize_query, point_lookup)
+
+
+@jax.jit
+def _init_mask(labels: jnp.ndarray, want: jnp.ndarray) -> jnp.ndarray:
+    """[B, n] endpoint mask: WANT_ALL slots match every block, real
+    labels match their blocks, WANT_NONE (padding) matches none."""
+    return (want[:, None] == WANT_ALL) | (labels[None, :] == want[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("n_src",))
+def _hop(mask_tgt: jnp.ndarray, src: jnp.ndarray, elabel: jnp.ndarray,
+         dst: jnp.ndarray, want: jnp.ndarray, *, n_src: int) -> jnp.ndarray:
+    """One backward hop for a whole wave: block P survives for slot b
+    iff some edge (P, want[b], Q) has mask_tgt[b, Q]."""
+    hit = mask_tgt[:, dst] & (elabel[None, :] == want[:, None])
+    return jnp.zeros((mask_tgt.shape[0], n_src),
+                     dtype=jnp.bool_).at[:, src].max(hit)
+
+
+class QuotientEngine:
+    """Serves one `QuotientIndex` snapshot.  ``epoch`` names the
+    snapshot every answer was computed against (the service bumps it
+    atomically with the device-array swap)."""
+
+    def __init__(self, index, *, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.index = index
+        self.max_batch = int(max_batch)
+        self.epoch = int(index.epoch)
+        self.stats = dict(waves=0, hops=0, queries=0, point_lookups=0)
+        self._dev_levels: Dict[int, tuple] = {}
+        self._dev_labels: Dict[int, jnp.ndarray] = {}
+        self.refresh()
+
+    # ------------------------------------------------------------ snapshot
+    def refresh(self, levels=None) -> None:
+        """(Re-)upload level edge triples and block labels; with
+        ``levels`` only those (a patch's touched set), else all.  The
+        caller swaps the host index first — queries issued before the
+        refresh read the previous snapshot's arrays."""
+        idx = self.index
+        lvls = range(1, idx.k + 1) if levels is None else sorted(levels)
+        for j in lvls:
+            L = idx.levels[j]
+            self._dev_levels[j] = (jnp.asarray(L.src),
+                                   jnp.asarray(L.elabel),
+                                   jnp.asarray(L.dst))
+        labs = range(idx.k + 1) if levels is None else sorted(
+            set(levels) | {j - 1 for j in levels})
+        for j in labs:
+            if 0 <= j <= idx.k:
+                self._dev_labels[j] = jnp.asarray(idx.labels[j])
+        self.epoch = int(idx.epoch)
+
+    def rebind(self, index) -> None:
+        """Point the engine at a replacement index (rematerialization):
+        drop every cached device array and re-upload from scratch."""
+        self.index = index
+        self._dev_levels.clear()
+        self._dev_labels.clear()
+        self.refresh()
+
+    # -------------------------------------------------------------- serve
+    def query(self, queries: List) -> List:
+        """Evaluate a batch of queries; answers keep input order.  Path
+        queries return ascending node-id arrays, `PointLookup` returns
+        a `PointAnswer`."""
+        answers: List = [None] * len(queries)
+        buckets: Dict[tuple, list] = {}
+        for i, q in enumerate(queries):
+            if isinstance(q, PointLookup):
+                answers[i] = point_lookup(self.index, q.node, q.level)
+                self.stats["point_lookups"] += 1
+                continue
+            labels, src_l, tgt_l, level = normalize_query(q, self.index.k)
+            buckets.setdefault((level, len(labels)), []).append(
+                (i, labels, src_l, tgt_l))
+        for (j, m), items in sorted(buckets.items()):
+            for w0 in range(0, len(items), self.max_batch):
+                self._run_wave(j, m, items[w0:w0 + self.max_batch],
+                               answers)
+        return answers
+
+    def _run_wave(self, j: int, m: int, wave: list, answers: list) -> None:
+        B = self.max_batch
+        with obs.span("quotient.query_wave", level=j, hops=m,
+                      batch=len(wave), epoch=self.epoch):
+            want = np.full(B, WANT_NONE, dtype=np.int32)
+            for s, (_, _, _, tgt_l) in enumerate(wave):
+                want[s] = WANT_ALL if tgt_l is None else tgt_l
+            mask = _init_mask(self._dev_labels[j - m], jnp.asarray(want))
+            for t in range(m - 1, -1, -1):
+                lev = j - t
+                src, el, dst = self._dev_levels[lev]
+                lab_t = np.full(B, WANT_NONE, dtype=np.int32)
+                for s, (_, labels, _, _) in enumerate(wave):
+                    lab_t[s] = labels[t]
+                mask = _hop(mask, src, el, dst, jnp.asarray(lab_t),
+                            n_src=self.index.counts[lev])
+                self.stats["hops"] += 1
+            host = np.asarray(mask)  # the wave's one device->host sync
+            self.stats["waves"] += 1
+            for s, (i, _, src_l, _) in enumerate(wave):
+                answers[i] = expand_blocks(self.index, j, host[s], src_l)
+                self.stats["queries"] += 1

@@ -1,0 +1,62 @@
+"""Parser contract for the launcher: the global flags that apply to
+every subcommand must be discoverable from every subcommand's --help
+(argparse only lists top-level flags under the bare --help, so each
+subparser carries them in its epilog — this test keeps the epilog and
+the actual flags from drifting apart)."""
+import argparse
+
+import pytest
+
+from repro.launch.bisim import build_parser
+
+SHARED_FLAGS = ["--trace", "--wal-group", "--sync-every",
+                "--device-maintenance"]
+
+
+def _subparsers(ap: argparse.ArgumentParser) -> dict:
+    for action in ap._actions:
+        if isinstance(action, argparse._SubParsersAction):
+            return dict(action.choices)
+    raise AssertionError("launcher has no subparsers")
+
+
+def test_every_subcommand_helps_with_shared_flags():
+    subs = _subparsers(build_parser())
+    assert {"add-edges", "delete-node", "compact", "recover",
+            "materialize", "query"} <= set(subs)
+    for name, sp in subs.items():
+        help_text = sp.format_help()
+        for flag in SHARED_FLAGS:
+            assert flag in help_text, (
+                f"subcommand {name!r} --help does not mention {flag}; "
+                "update _SHARED_EPILOG in repro/launch/bisim.py")
+
+
+def test_shared_flags_exist_on_top_parser():
+    ap = build_parser()
+    top = {opt for a in ap._actions for opt in a.option_strings}
+    for flag in SHARED_FLAGS:
+        assert flag in top, f"epilog advertises {flag} but the parser " \
+                            "does not define it"
+
+
+def test_quotient_subcommands_parse():
+    ap = build_parser()
+    args = ap.parse_args(["materialize", "--quotient-dir", "/tmp/q"])
+    assert args.cmd == "materialize" and args.quotient_dir == "/tmp/q"
+    args = ap.parse_args(["query", "--path", "0:1:2", "--path", "3",
+                          "--point", "7", "--update", "4",
+                          "--batch", "16"])
+    assert args.cmd == "query"
+    assert args.path == ["0:1:2", "3"] and args.point == [7]
+    assert args.update == 4 and args.batch == 16
+
+
+def test_existing_subcommands_still_parse():
+    ap = build_parser()
+    assert ap.parse_args(["add-edges", "--count", "3"]).count == 3
+    assert ap.parse_args(["delete-node", "--nid", "5"]).nid == 5
+    assert ap.parse_args(
+        ["compact", "--delete-nodes", "1,2"]).delete_nodes == "1,2"
+    with pytest.raises(SystemExit):
+        ap.parse_args(["delete-node"])  # --nid is required

@@ -365,3 +365,63 @@ def test_retry_events_traced():
         assert with_retries(flaky, backoff_s=0.0) == "ok"
     retries = t.find_events("fault.retry")
     assert [e["attrs"]["attempt"] for e in retries] == [1, 2]
+
+
+def test_quotient_serving_bit_identical_with_tracing(tmp_path):
+    """The quotient subsystem under tracing: identical query answers,
+    identical patched artifact, exactly equal IOStats — and the traced
+    run emits the materialize/patch/query_wave spans + epoch events."""
+    from repro.quotient import LabelPath, PointLookup, QuotientService
+
+    g = gen.structured_graph(60, seed=9)
+    queries = [LabelPath((0, 1), level=3), LabelPath((2,), level=1),
+               PointLookup(5, 3)]
+
+    def _run(traced, sub):
+        backend = OocBackend(g, chunk_edges=256,
+                             workdir=str(tmp_path / sub / "b"))
+        m = BisimMaintainer(backend, 3)
+        rng = np.random.default_rng(21)
+
+        def _drive():
+            svc = QuotientService(m, str(tmp_path / sub), max_batch=2)
+            a0 = svc.query(queries)
+            n = backend.num_nodes
+            svc.add_edges(rng.integers(0, n, 5).astype(np.int32),
+                          rng.integers(0, 3, 5).astype(np.int32),
+                          rng.integers(0, n, 5).astype(np.int32))
+            return svc, a0, svc.query(queries)
+
+        if traced:
+            tracer = Tracer()
+            with tracing(tracer):
+                svc, a0, a1 = _drive()
+        else:
+            tracer, (svc, a0, a1) = None, _drive()
+        io = dict(sort_cost=svc.io.sort_cost, scan_cost=svc.io.scan_cost,
+                  sort_bytes=svc.io.sort_bytes,
+                  scan_bytes=svc.io.scan_bytes)
+        runs = [(svc.index.runs[j].start.copy(),
+                 svc.index.runs[j].pid.copy())
+                for j in range(svc.index.k + 1)]
+        backend.close()
+        return a0, a1, io, runs, tracer
+
+    a0_off, a1_off, io_off, runs_off, _ = _run(False, "off")
+    a0_on, a1_on, io_on, runs_on, tracer = _run(True, "on")
+    for off, on in ((a0_off, a0_on), (a1_off, a1_on)):
+        for q, x, y in zip(queries, off, on):
+            if isinstance(q, PointLookup):
+                assert x == y
+            else:
+                np.testing.assert_array_equal(x, y)
+    assert io_off == io_on, "quotient IOStats diverged under tracing"
+    for (s0, p0), (s1, p1) in zip(runs_off, runs_on):
+        np.testing.assert_array_equal(s0, s1)
+        np.testing.assert_array_equal(p0, p1)
+    for name in ("quotient.materialize", "quotient.level",
+                 "quotient.patch", "quotient.query_wave"):
+        assert tracer.find(name), f"no {name} spans"
+    epochs = tracer.find_events("quotient.epoch")
+    assert [e["attrs"]["epoch"] for e in epochs] == [1]
+    _assert_no_aio_threads()
