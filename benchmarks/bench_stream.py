@@ -1,0 +1,137 @@
+"""Streaming maintenance service: sustained updates/sec at bounded
+index staleness on a powerlaw graph, plus the crash/recovery drill.
+
+Two legs:
+
+  ingest     closed-loop replay of a synthesized mixed op stream
+             (insert/delete/add-node) through the WAL'd
+             `StreamingMaintenanceService` with a live quotient index —
+             the sustained-throughput number the ROADMAP's streaming
+             item asks for, with the observed max index staleness
+             checked against the configured bound.
+
+  recovery   the same stream on a smaller graph (io_threads=0 for
+             deterministic fault behavior), killed mid-stream by
+             abandoning the service with an uncommitted WAL tail
+             (wal_group > 1), recovered from the snapshot + committed
+             records, lost suffix resubmitted — the final pid history
+             must be bit-identical to an uninterrupted reference run.
+
+JSON extras record updates_per_sec, max_staleness vs bound, and the
+bit_identical verdict, so CI can gate on them.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BisimMaintainer
+from repro.exmem import (OocBackend, StreamConfig,
+                         StreamingMaintenanceService, replay_open_loop,
+                         synthesize_ops)
+from repro.graph import generators as gen
+from repro.quotient import QuotientService
+
+K = 3
+
+
+def _spinup(g, workdir, cfg, *, io_threads, wal_group, quotient):
+    backend = OocBackend(g, chunk_edges=1 << 12, spill_threshold=1 << 14,
+                         workdir=workdir, io_threads=io_threads,
+                         wal=True, wal_group=wal_group)
+    m = BisimMaintainer(backend, K, mode="sorted", wal=True)
+    q = QuotientService(m, workdir, aio=backend.aio) if quotient else None
+    return StreamingMaintenanceService(m, config=cfg, quotient=q), backend
+
+
+def _ingest_leg(scale: int, tmp: str):
+    g = gen.powerlaw_graph(1000 * scale, 3000 * scale, 4, 3, seed=11)
+    cfg = StreamConfig(batch_ops=32, batch_deadline_s=0.05,
+                       snapshot_every=8, staleness_batches=2,
+                       compact_threshold=0.25, async_wal=True)
+    ops = synthesize_ops(240 * scale, num_nodes=g.num_nodes, seed=23)
+    svc, backend = _spinup(g, tmp + "/ingest", cfg,
+                           io_threads=1, wal_group=8, quotient=True)
+    t0 = time.perf_counter()
+    replay_open_loop(svc, ops)
+    svc.close()
+    wall = time.perf_counter() - t0
+    st = svc.stats()
+    backend.close()
+    assert st["max_staleness"] <= st["staleness_bound"], st
+    return st, wall, len(ops)
+
+
+def _recovery_leg(scale: int, tmp: str):
+    g = gen.powerlaw_graph(120, 360, 4, 3, seed=11)
+    # deterministic leg: synchronous I/O, no state-timed compaction
+    cfg = StreamConfig(batch_ops=8, batch_deadline_s=10.0,
+                       snapshot_every=4, staleness_batches=1,
+                       compact_threshold=0.0)
+    ops = synthesize_ops(60, num_nodes=g.num_nodes, seed=31)
+    kill_at = 37
+
+    ref_svc, ref_backend = _spinup(g, tmp + "/ref", cfg,
+                                   io_threads=0, wal_group=4,
+                                   quotient=False)
+    replay_open_loop(ref_svc, ops)
+    ref_svc.close()
+    ref_pids = [np.asarray(ref_svc.m.pids[j]).copy() for j in range(K + 1)]
+    ref_backend.close()
+
+    svc, backend = _spinup(g, tmp + "/live", cfg,
+                           io_threads=0, wal_group=4, quotient=False)
+    lsns = replay_open_loop(svc, ops[:kill_at])
+    backend.aio.close()          # the crash: no clean close, no drain
+
+    t0 = time.perf_counter()
+    svc2 = StreamingMaintenanceService.recover(tmp + "/live",
+                                               io_threads=0, config=cfg)
+    recover_s = time.perf_counter() - t0
+    committed = svc2.m.backend._wal.committed_lsn
+    done = sum(1 for lsn in lsns if lsn <= committed)
+    replay_open_loop(svc2, ops[done:])
+    svc2.close()
+    identical = all(
+        np.array_equal(np.asarray(svc2.m.pids[j]), ref_pids[j])
+        for j in range(K + 1))
+    svc2.m.backend.close()
+    assert identical, "recovered pid history diverged"
+    return dict(recover_s=recover_s, survived=done,
+                lost=kill_at - done, resubmitted=len(ops) - done,
+                bit_identical=identical)
+
+
+def run(scale: int = 1):
+    tmp = tempfile.mkdtemp(prefix="bench-stream-")
+    try:
+        st, wall, n_ops = _ingest_leg(scale, tmp)
+        rec = _recovery_leg(scale, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    rows = [
+        ("ingest", wall * 1e6 / max(n_ops, 1),
+         f"ops={n_ops};updates_per_sec={st['updates_per_sec']:.0f};"
+         f"batches={st['applied_batches']};snapshots={st['snapshots']};"
+         f"compactions={st['compactions_scheduled']};"
+         f"rejected={st['rejected']}"),
+        ("staleness", 0.0,
+         f"max={st['max_staleness']};bound={st['staleness_bound']};"
+         f"ok={st['max_staleness'] <= st['staleness_bound']};"
+         f"epochs={st['epoch']}"),
+        ("recovery", rec["recover_s"] * 1e6,
+         f"bit_identical={rec['bit_identical']};"
+         f"survived={rec['survived']};lost={rec['lost']};"
+         f"resubmitted={rec['resubmitted']}"),
+    ]
+    extras = {
+        "updates_per_sec": round(float(st["updates_per_sec"]), 1),
+        "max_staleness": int(st["max_staleness"]),
+        "staleness_bound": int(st["staleness_bound"]),
+        "bit_identical": bool(rec["bit_identical"]),
+    }
+    return rows, extras

@@ -14,7 +14,7 @@ import time
 
 from benchmarks import (bench_batch_updates, bench_block_sweep, bench_build,
                         bench_extremes, bench_maintenance, bench_scaling,
-                        bench_serve, bench_sig_store)
+                        bench_serve, bench_sig_store, bench_stream)
 
 ALL = [
     ("fig3_table7_build", bench_build.run, True),
@@ -26,6 +26,7 @@ ALL = [
     ("fig11_batch_updates", bench_batch_updates.run, True),
     ("fig12_prefetch", bench_build.run_prefetch, True),
     ("serve", bench_serve.run, True),
+    ("stream", bench_stream.run, True),
 ]
 
 

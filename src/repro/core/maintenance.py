@@ -719,6 +719,10 @@ class BisimMaintainer:
         # service reads this to patch touched blocks instead of
         # rematerializing.
         self.last_changed = None
+        # optional scheduling hook: called as on_rebuild(level, frontier)
+        # whenever the §4.2 heuristic fires mid-propagation, so a service
+        # loop can account for the rebuild (e.g. force an early snapshot)
+        self.on_rebuild = None
 
     # ------------------------------------------------------------ durability
     @contextlib.contextmanager
@@ -740,6 +744,72 @@ class BisimMaintainer:
             yield
         finally:
             self._wal_depth -= 1
+
+    @contextlib.contextmanager
+    def already_logged(self):
+        """Run update methods without re-logging them — for callers (the
+        streaming service) that appended the records to the WAL at
+        submit time, before the batch trigger fired."""
+        self._wal_depth += 1
+        try:
+            yield
+        finally:
+            self._wal_depth -= 1
+
+    def apply_ops(self, ops, *, logged: bool = True):
+        """Apply a batch of mixed logical updates in order.
+
+        ``ops`` is an iterable of ``(op_name, arrays)`` pairs in
+        `_REPLAY_OPS` form (the WAL's record vocabulary).  Application
+        order is exactly the given order — batching schedules *when*
+        updates apply, never reorders them — so the pid history is
+        bit-identical to applying each op individually, and therefore to
+        a WAL replay of the same records.
+
+        ``logged=False`` declares the records already WAL'd by the
+        caller (submit-time append): nothing is re-logged, and ops the
+        backend rejects (ValueError/OverflowError) are skipped and
+        counted, mirroring what replay will do with the same record.
+        ``logged=True`` logs each op normally and re-raises rejections.
+
+        Returns ``(report, rejected)``: the merged `MaintenanceReport`
+        (padded to k levels) and the rejected-op count.  After return,
+        `last_changed` holds the per-level union of every applied op's
+        changed sets (None if any op poisoned it: rebuild, compact with
+        tombstones, change_k).
+        """
+        merged = MaintenanceReport([], [], [], device=self.device)
+        union = [np.empty(0, dtype=np.int64) for _ in range(self.k + 1)]
+        poisoned = False
+        rejected = 0
+        ctx = self.already_logged if not logged else contextlib.nullcontext
+        with ctx():
+            for op, arrays in ops:
+                self.last_changed = None
+                try:
+                    out = self._REPLAY_OPS[op](self, arrays)
+                except (ValueError, OverflowError):
+                    if logged:
+                        raise
+                    rejected += 1
+                    continue
+                if isinstance(out, MaintenanceReport):
+                    merged.merge(out)
+                if poisoned:
+                    continue
+                if self.last_changed is None:
+                    poisoned = True
+                elif op == "change_k":
+                    poisoned = True  # level count moved under the union
+                else:
+                    if len(self.last_changed) > len(union):
+                        union.extend(np.empty(0, dtype=np.int64)
+                                     for _ in range(len(self.last_changed)
+                                                    - len(union)))
+                    union = [np.union1d(u, c) for u, c in
+                             zip(union, self.last_changed)]
+        self.last_changed = None if poisoned else union
+        return self._pad_report(merged), rejected
 
     def snapshot(self) -> None:
         """Persist the maintained partition durably: commit the WAL, then
@@ -784,6 +854,8 @@ class BisimMaintainer:
         m._wal_depth = 0
         m._tombstone = np.asarray(state["tombstone"], dtype=bool)
         m.device = bool(device) and backend.enable_device()
+        m.last_changed = None
+        m.on_rebuild = None
         m._in_replay = True
         try:
             for _lsn, op, arrays in backend.wal_replay_records(
@@ -997,6 +1069,8 @@ class BisimMaintainer:
                     self.backend.build(self.k, self.mode)
                 report.rebuilt = True
                 self.last_changed = None  # rebuild re-ranks every level
+                if self.on_rebuild is not None:
+                    self.on_rebuild(j, int(frontier.size))
                 return self._pad_report(report)
             with obs.span("maint.level", level=j,
                           frontier=int(frontier.size),

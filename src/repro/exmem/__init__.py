@@ -123,6 +123,48 @@ input, not an exception path.  The subsystem's guarantees:
     the manifest protects artifact *files*, not the free-form workdir
     scratch, which recovery deletes.
 
+Streaming service
+-----------------
+`service.StreamingMaintenanceService` turns the one-shot batch model
+into sustained ingest.  The lifecycle of an op through the service:
+
+  ingest        ``submit(op, arrays)`` appends the record to the WAL
+                immediately — that append is the acknowledgement, and
+                group commit (``wal_group``, optionally with the fsync
+                round running asynchronously on the aio executor via
+                ``StreamConfig(async_wal=True)``) bounds the loss
+                window to ``group - 1`` acked ops;
+  group-commit  records become durable at each group boundary; a
+                service stop (`OocBackend.close`) drains in-flight
+                async rounds before the executor shuts down, so no
+                partial commit line is ever published;
+  batch apply   pending ops apply through
+                `BisimMaintainer.apply_ops` when the buffer reaches
+                ``batch_ops`` or ages past ``batch_deadline_s`` —
+                strictly in submission order, so the pid history is
+                bit-identical to unbatched application and to WAL
+                replay;
+  compaction / rebuild cadence
+                crossing ``compact_threshold`` (tombstone fraction)
+                enqueues a WAL'd ``compact`` op; a §4.2 rebuild fired
+                by the maintainer is observed via `on_rebuild` and
+                forces an early snapshot;
+  snapshot cadence
+                every ``snapshot_every`` applied batches the service
+                snapshots (WAL commit + manifest-committed snapshot dir
+                + truncation; the truncation publishes a durable lsn
+                floor first, keeping lsn numbering monotone even across
+                a fully truncated log);
+  index patch   every ``staleness_batches`` batches the attached
+                `repro.quotient.QuotientService` absorbs the
+                accumulated changed-node union — one engine epoch per
+                absorption, with queries pinned lock-free to the
+                pre-patch epoch while it lands.
+
+`StreamingMaintenanceService.recover` resumes a killed stream from the
+snapshot + committed WAL; resubmitting the lost suffix reproduces the
+never-killed run's pid history bit-identically (``tests/test_stream.py``).
+
 Observability
 -------------
 Every phase of the subsystem is traced through `repro.obs` — the
@@ -163,6 +205,8 @@ from .durability import Manifest, WriteAheadLog
 from .maintenance import OocBackend
 from .runs import (IOStats, external_sort, lexsort_records, make_records,
                    merge_runs, rebuffer, sort_to_runs)
+from .service import (StreamConfig, StreamingMaintenanceService,
+                      replay_open_loop, synthesize_ops)
 from .tables import ChunkedColumn, OocGraph
 
 __all__ = [
@@ -171,4 +215,6 @@ __all__ = [
     "rebuffer", "sort_to_runs", "ChunkedColumn", "OocGraph",
     "AioConfig", "AioStats", "BoundedSaver", "Pipeline", "PrefetchReader",
     "ReadaheadArray", "StreamingWriter", "Manifest", "WriteAheadLog",
+    "StreamConfig", "StreamingMaintenanceService", "replay_open_loop",
+    "synthesize_ops",
 ]

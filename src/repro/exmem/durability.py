@@ -47,6 +47,7 @@ import io as _io
 import json
 import os
 import shutil
+import threading
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
@@ -214,26 +215,54 @@ class WriteAheadLog:
     loses at most the last ``group - 1`` acknowledged-but-uncommitted
     updates (bounded, documented staleness; ``group=1`` commits every
     batch).
+
+    ``async_commits=True`` moves the per-group fsync round onto the
+    shared aio executor: `append` still seals the group, but the fsyncs
+    happen in the background while the caller keeps ingesting.  Rounds
+    are chained (each waits on its predecessor before publishing commit
+    lines) so commit order stays lsn order; `drain()`/`commit()`/
+    `close()` wait for every in-flight round — and re-raise its error —
+    before returning, so a clean close never leaves a round running on
+    the executor or a partially published group.
     """
+
+    FLOOR_NAME = "floor.json"
 
     def __init__(self, root: str, *, group: int = 1,
                  aio: "Optional[aio_mod.AioConfig]" = None,
-                 start_lsn: int = 0):
+                 start_lsn: int = 0, async_commits: bool = False):
         if group < 1:
             raise ValueError("group must be >= 1")
         os.makedirs(root, exist_ok=True)
         self.root = root
         self.group = int(group)
         self.aio = aio
+        self.async_commits = bool(async_commits)
         self._pending: list = []   # [(lsn, path, crc, nbytes)] not committed
+        self._commit_lock = threading.Lock()
+        self._inflight = None      # future of the newest async commit round
         # start_lsn floors the numbering: a snapshot that absorbed (and
         # truncated) the whole log leaves commits.log empty, but new
         # records must still number past the snapshot's wal_lsn or the
-        # next replay's `lsn > after_lsn` filter would skip them
-        self.committed_lsn = int(start_lsn)
+        # next replay's `lsn > after_lsn` filter would skip them.  The
+        # floor file (written durably by `truncate` *before* the log
+        # shrinks) covers reopens that don't know the snapshot's wal_lsn.
+        self.committed_lsn = max(int(start_lsn), self._read_floor())
         for lsn, _, _ in self._committed_lines():
             self.committed_lsn = max(self.committed_lsn, lsn)
         self.last_lsn = self.committed_lsn  # highest lsn ever appended
+
+    def _read_floor(self) -> int:
+        path = os.path.join(self.root, self.FLOOR_NAME)
+        if not os.path.exists(path):
+            return 0
+        try:
+            return int(read_json(path).get("floor", 0))
+        except ChecksumError:
+            # the floor only supplements start_lsn; an unreadable file
+            # must not block recovery (atomic_write_json makes a torn
+            # floor near-impossible anyway)
+            return 0
 
     # ------------------------------------------------------------ appending
     def _rec_path(self, lsn: int) -> str:
@@ -261,30 +290,69 @@ class WriteAheadLog:
         self._pending.append((lsn, path, writer.checksum,
                               int(payload.shape[0])))
         if len(self._pending) >= self.group:
-            self.commit()
+            if self.async_commits:
+                self.commit_async()
+            else:
+                self.commit()
         return lsn
 
+    def _commit_round(self, pending) -> None:
+        """One durable fsync round over ``pending`` records: fsync the
+        record files, append their commit lines in lsn order, fsync the
+        commit log and the WAL directory."""
+        with self._commit_lock:
+            with obs.span("wal.commit", records=len(pending),
+                          lsn=pending[-1][0]):
+                for _, path, _, _ in pending:
+                    fault_point("wal_commit", path)
+                    with open(path, "rb") as f:
+                        os.fsync(f.fileno())
+                log = os.path.join(self.root, "commits.log")
+                with open(log, "a") as f:
+                    for lsn, _, crc, nbytes in pending:
+                        f.write(f"{lsn} {crc} {nbytes}\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+                aio_mod.fsync_dir(self.root)
+            self.committed_lsn = pending[-1][0]
+
+    def commit_async(self) -> None:
+        """Seal the pending group and make it durable on the aio
+        executor.  Rounds chain on their predecessor so commit lines hit
+        ``commits.log`` in lsn order even with a multi-thread pool; with
+        no executor configured this degrades to a synchronous commit."""
+        if not self._pending:
+            return
+        if self.aio is None:
+            self.commit()
+            return
+        pending, self._pending = self._pending, []
+        prev = self._inflight
+
+        def _round():
+            if prev is not None:
+                prev.result()
+            self._commit_round(pending)
+
+        self._inflight = self.aio.submit(_round, label="wal.commit.async")
+
+    def drain(self) -> None:
+        """Wait for every in-flight async commit round; re-raise its
+        error.  After `drain` returns, everything previously sealed by
+        `commit_async` is durable (or the failure has surfaced here)."""
+        fut, self._inflight = self._inflight, None
+        if fut is not None:
+            fut.result()
+
     def commit(self) -> None:
-        """Make every pending record durable: fsync the record files,
-        append their commit lines in lsn order, fsync the commit log and
-        the WAL directory.  One fsync round per group."""
+        """Make every pending record durable: drain in-flight async
+        rounds, then run one synchronous fsync round over the pending
+        group."""
+        self.drain()
         if not self._pending:
             return
         pending, self._pending = self._pending, []
-        with obs.span("wal.commit", records=len(pending),
-                      lsn=pending[-1][0]):
-            for _, path, _, _ in pending:
-                fault_point("wal_commit", path)
-                with open(path, "rb") as f:
-                    os.fsync(f.fileno())
-            log = os.path.join(self.root, "commits.log")
-            with open(log, "a") as f:
-                for lsn, _, crc, nbytes in pending:
-                    f.write(f"{lsn} {crc} {nbytes}\n")
-                f.flush()
-                os.fsync(f.fileno())
-            aio_mod.fsync_dir(self.root)
-        self.committed_lsn = pending[-1][0]
+        self._commit_round(pending)
 
     flush = commit
 
@@ -320,9 +388,18 @@ class WriteAheadLog:
     # ------------------------------------------------------------ truncate
     def truncate(self, upto_lsn: int) -> None:
         """Drop records with ``lsn <= upto_lsn`` (absorbed by a
-        snapshot).  The commit log is rewritten atomically; record files
-        are removed after the new log is durable, so a crash mid-truncate
-        leaves only harmless orphans (replay is driven by the log)."""
+        snapshot).  The lsn floor is published durably *first*, then the
+        commit log is rewritten atomically; record files are removed
+        only after the new log is durable, so a crash at any point
+        mid-truncate leaves either the full old log (floor already
+        durable) or the new log plus harmless orphan record files
+        (replay is driven by the log) — and a reopen can never reissue
+        an lsn the truncated log no longer witnesses."""
+        self.drain()
+        floor_path = os.path.join(self.root, self.FLOOR_NAME)
+        fault_point("wal_truncate", floor_path)
+        atomic_write_json(floor_path,
+                          {"floor": max(int(upto_lsn), self._read_floor())})
         keep = [(lsn, crc, nb) for lsn, crc, nb in self._committed_lines()
                 if lsn > upto_lsn]
         log = os.path.join(self.root, "commits.log")
@@ -332,8 +409,10 @@ class WriteAheadLog:
                 f.write(f"{lsn} {crc} {nb}\n")
             f.flush()
             os.fsync(f.fileno())
+        fault_point("wal_truncate", log)
         os.replace(tmp, log)
         aio_mod.fsync_dir(self.root)
+        fault_point("wal_truncate", self.root)
         for name in os.listdir(self.root):
             if name.startswith("rec_") and name.endswith(".npy"):
                 lsn = int(name[4:-4])
@@ -341,4 +420,7 @@ class WriteAheadLog:
                     os.remove(os.path.join(self.root, name))
 
     def close(self) -> None:
+        """Flush + drain: after `close` returns no commit round is
+        running on the executor and every appended record either has a
+        durable commit line or was never acknowledged as committed."""
         self.commit()

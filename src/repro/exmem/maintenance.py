@@ -90,7 +90,8 @@ class OocBackend(MaintenanceBackend):
                  chunk_nodes: Optional[int] = None,
                  spill_threshold: int = 1 << 20,
                  io_threads: int = 1, prefetch_depth: int = 2,
-                 wal: bool = False, wal_group: int = 1):
+                 wal: bool = False, wal_group: int = 1,
+                 wal_async: bool = False):
         self.io = IOStats()
         # one async pipeline per backend: the builds it runs, its table
         # scans, and its pid-file rewrites all share the executor and the
@@ -123,8 +124,18 @@ class OocBackend(MaintenanceBackend):
         self._device = False
         self._closed = False
         self._wal = (WriteAheadLog(os.path.join(workdir, "wal"),
-                                   group=wal_group, aio=self.aio)
+                                   group=wal_group, aio=self.aio,
+                                   async_commits=wal_async)
                      if wal else None)
+
+    def wal_enable_async(self, enabled: bool = True) -> None:
+        """Flip the WAL's group-commit fsync rounds onto the shared aio
+        executor (or back).  Usable after `restore`, which reopens the
+        WAL synchronous by default."""
+        if self._wal is not None:
+            if not enabled:
+                self._wal.drain()
+            self._wal.async_commits = bool(enabled)
 
     # ----------------------------------------------------- device capability
     def enable_device(self) -> bool:
@@ -177,13 +188,18 @@ class OocBackend(MaintenanceBackend):
         """Release stores, pid files, the WAL, the pipeline executor, and
         (if owned) the workdir.  Idempotent, and safe mid-teardown after
         an injected crash: every stage runs even if an earlier one threw,
-        so no aio worker threads or spill files outlive the backend."""
+        so no aio worker threads or spill files outlive the backend.
+
+        Ordering contract: the WAL closes (draining any in-flight async
+        commit round and committing pending records) strictly before the
+        aio executor shuts down — a stop mid-group must never abandon a
+        commit round on a dying pool or publish a partial commit line."""
         if self._closed:
             return
         self._closed = True
         try:
             if self._wal is not None:
-                self._wal.close()  # commits appended-but-pending records
+                self._wal.close()  # drains async rounds + commits pending
         finally:
             self._dispose_build()
             self.aio.close()

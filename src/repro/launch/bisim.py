@@ -151,11 +151,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "--oocore (never materializes the full history)")
     sub = ap.add_subparsers(
         dest="cmd",
-        metavar="{add-edges,delete-node,compact,recover,materialize,query}",
+        metavar="{add-edges,delete-node,compact,recover,materialize,"
+                "query,serve-updates}",
         help="subcommands: apply one update through BisimMaintainer "
              "(in-memory, or OocBackend with --oocore), recover a "
-             "crashed workdir, or materialize/query the quotient "
-             "artifact (repro.quotient)")
+             "crashed workdir, materialize/query the quotient "
+             "artifact (repro.quotient), or run the streaming "
+             "maintenance service (repro.exmem.service)")
 
     def _sub(name, help):
         return sub.add_parser(
@@ -209,6 +211,46 @@ def build_parser() -> argparse.ArgumentParser:
     ap_qry.add_argument("--batch", type=int, default=64,
                         help="engine wave width (fixed slots per "
                              "dispatch)")
+    ap_srv = _sub("serve-updates",
+                  "streaming maintenance service: replay an open-loop "
+                  "stream of mixed ops through the WAL'd ingest loop "
+                  "(batched apply, compaction/snapshot cadence, live "
+                  "quotient index within a staleness bound); requires "
+                  "--oocore --wal --workdir")
+    ap_srv.add_argument("--ops", type=int, default=200,
+                        help="synthesized stream length (mixed "
+                             "insert/delete/add-node ops)")
+    ap_srv.add_argument("--rate", type=float, default=0.0,
+                        help="arrival rate in ops/sec (0 = closed-loop, "
+                             "as fast as the service absorbs)")
+    ap_srv.add_argument("--batch-ops", type=int, default=32,
+                        help="apply the pending batch at this many ops")
+    ap_srv.add_argument("--batch-deadline-ms", type=float, default=50.0,
+                        help="... or when the oldest pending op is this "
+                             "old")
+    ap_srv.add_argument("--snapshot-every", type=int, default=8,
+                        help="snapshot cadence in applied batches "
+                             "(0 = only the final close snapshot)")
+    ap_srv.add_argument("--staleness-batches", type=int, default=1,
+                        help="absorb the quotient index after this many "
+                             "applied batches (the staleness bound)")
+    ap_srv.add_argument("--compact-threshold", type=float, default=0.25,
+                        help="tombstone fraction that schedules a WAL'd "
+                             "compact op (0 disables; forced to 0 with "
+                             "--kill-at-op for bit-identical recovery)")
+    ap_srv.add_argument("--async-wal", action="store_true",
+                        help="run WAL group-commit fsync rounds on the "
+                             "aio executor (drained at snapshot/close)")
+    ap_srv.add_argument("--no-quotient", action="store_true",
+                        help="ingest + durability only: skip the live "
+                             "quotient index")
+    ap_srv.add_argument("--kill-at-op", type=int, default=0, metavar="N",
+                        help="crash drill: abandon the service after N "
+                             "submitted ops (no clean close), recover "
+                             "from the snapshot + committed WAL, resubmit "
+                             "the lost suffix, and verify the pid "
+                             "history is bit-identical to an "
+                             "uninterrupted reference run")
     return ap
 
 
@@ -470,6 +512,115 @@ def run_query(args) -> None:
         _report(answers)
 
 
+def run_serve(args, g: Graph) -> None:
+    """Open-loop streaming maintenance over the WAL'd ingest loop."""
+    import dataclasses as _dc
+    import os
+
+    import numpy as np
+
+    from repro.core import BisimMaintainer
+    from repro.exmem import (OocBackend, StreamConfig,
+                             StreamingMaintenanceService, replay_open_loop,
+                             synthesize_ops)
+    from repro.quotient import QuotientService
+
+    if not (args.oocore and args.wal and args.workdir):
+        raise SystemExit("serve-updates needs --oocore --wal --workdir")
+    cfg = StreamConfig(
+        batch_ops=args.batch_ops,
+        batch_deadline_s=args.batch_deadline_ms / 1e3,
+        snapshot_every=args.snapshot_every,
+        staleness_batches=args.staleness_batches,
+        compact_threshold=args.compact_threshold,
+        async_wal=args.async_wal)
+    ops = synthesize_ops(args.ops, num_nodes=g.num_nodes, seed=args.seed)
+
+    def _spinup(workdir):
+        backend = OocBackend(
+            g, chunk_edges=args.chunk_edges, chunk_nodes=args.chunk_nodes,
+            spill_threshold=args.spill_threshold, workdir=workdir,
+            io_threads=_io_threads(args),
+            prefetch_depth=args.prefetch_depth,
+            wal=True, wal_group=args.wal_group)
+        m = BisimMaintainer(backend, args.k, mode=args.mode,
+                            device=args.device_maintenance, wal=True)
+        q = (None if args.no_quotient
+             else QuotientService(m, workdir, aio=backend.aio))
+        return StreamingMaintenanceService(m, config=cfg, quotient=q), \
+            backend
+
+    def _print_stats(svc):
+        st = svc.stats()
+        print(f"stream: {st['applied_ops']} ops in {st['wall_s']:.2f}s "
+              f"= {st['updates_per_sec']:.0f} updates/s "
+              f"({st['applied_batches']} batches, "
+              f"{st['snapshots']} snapshots, {st['rejected']} rejected, "
+              f"{st['compactions_scheduled']} compactions, "
+              f"{st['rebuilds']} rebuilds)")
+        if svc.q is not None:
+            ok = st["max_staleness"] <= st["staleness_bound"]
+            print(f"staleness: max={st['max_staleness']} batches "
+                  f"bound={st['staleness_bound']} "
+                  f"{'OK' if ok else 'VIOLATED'} "
+                  f"(epoch {st['epoch']})")
+            if not ok:
+                raise SystemExit("staleness bound violated")
+        return st
+
+    if not args.kill_at_op:
+        svc, backend = _spinup(args.workdir)
+        t0 = time.perf_counter()
+        with obs.span("launch.serve", ops=len(ops)):
+            replay_open_loop(svc, ops, rate=args.rate or None)
+            svc.close()
+        _print_stats(svc)
+        print(f"serve: wall {time.perf_counter() - t0:.2f}s, "
+              f"wal committed lsn {backend._wal.committed_lsn}")
+        print(f"workdir: {backend.workdir}")
+        return
+
+    # crash drill: reference run, killed run, recover, finish, compare.
+    # Compaction scheduling is state-timed, so it is disabled for the
+    # drill — a lost (uncommitted) compact record would re-schedule at a
+    # different position in the op order and honestly diverge.
+    cfg = _dc.replace(cfg, compact_threshold=0.0)
+    kill_at = min(int(args.kill_at_op), len(ops))
+    ref_svc, ref_backend = _spinup(os.path.join(args.workdir, "ref"))
+    replay_open_loop(ref_svc, ops)
+    ref_svc.close()
+    ref_pids = [np.asarray(ref_svc.m.pids[j]).copy()
+                for j in range(ref_svc.m.k + 1)]
+    ref_backend.close()
+
+    wd = os.path.join(args.workdir, "live")
+    svc, backend = _spinup(wd)
+    lsns = replay_open_loop(svc, ops[:kill_at])
+    backend.aio.close()   # the "dead" process: no clean close, no drain
+    print(f"killed after {kill_at}/{len(ops)} submitted ops "
+          f"(last acked lsn {lsns[-1] if lsns else 0})")
+
+    svc2 = StreamingMaintenanceService.recover(
+        wd, io_threads=_io_threads(args),
+        prefetch_depth=args.prefetch_depth,
+        device=args.device_maintenance, config=cfg,
+        quotient=not args.no_quotient)
+    committed = svc2.m.backend._wal.committed_lsn
+    done = sum(1 for lsn in lsns if lsn <= committed)
+    print(f"recovered: committed lsn {committed} -> "
+          f"{done} ops survived, resubmitting {len(ops) - done}")
+    replay_open_loop(svc2, ops[done:])
+    svc2.close()
+    _print_stats(svc2)
+    for j in range(svc2.m.k + 1):
+        if not np.array_equal(np.asarray(svc2.m.pids[j]), ref_pids[j]):
+            raise SystemExit(
+                f"recovery diverged from the uninterrupted run at "
+                f"level {j}")
+    print("recovery: pid history bit-identical to uninterrupted run")
+    svc2.m.backend.close()
+
+
 def _dispatch(args) -> None:
     if args.cmd == "recover":
         with obs.span("launch.recover"):
@@ -484,6 +635,9 @@ def _dispatch(args) -> None:
     if args.cmd == "materialize":
         with obs.span("launch.materialize"):
             run_materialize(args, g)
+        return
+    if args.cmd == "serve-updates":
+        run_serve(args, g)  # spans live inside the service loop
         return
     if args.cmd:
         with obs.span("launch.update", cmd=args.cmd):

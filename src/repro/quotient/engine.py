@@ -51,10 +51,38 @@ def _hop(mask_tgt: jnp.ndarray, src: jnp.ndarray, elabel: jnp.ndarray,
                      dtype=jnp.bool_).at[:, src].max(hit)
 
 
+class _EpochView:
+    """One epoch's immutable serving state: the host columns the answer
+    path reads (duck-typing the `QuotientIndex` attributes that
+    `expand_blocks` / `point_lookup` touch) plus the device-array dicts.
+    `QuotientEngine.refresh` builds a fresh view and publishes it with
+    one reference assignment — a query that pinned the previous view
+    keeps reading a complete, never-mutated epoch while a patch lands."""
+
+    __slots__ = ("epoch", "k", "counts", "labels", "runs",
+                 "dev_levels", "dev_labels")
+
+    def __init__(self, epoch, k, counts, labels, runs,
+                 dev_levels, dev_labels):
+        self.epoch = int(epoch)
+        self.k = int(k)
+        self.counts = counts
+        self.labels = labels
+        self.runs = runs
+        self.dev_levels = dev_levels
+        self.dev_labels = dev_labels
+
+
 class QuotientEngine:
     """Serves one `QuotientIndex` snapshot.  ``epoch`` names the
     snapshot every answer was computed against (the service bumps it
-    atomically with the device-array swap)."""
+    atomically with the device-array swap).
+
+    Admission is epoch-pinned: `query` captures the current `_EpochView`
+    once and answers entirely from it, so queries admitted while a
+    maintenance patch is being absorbed read the pre-patch epoch instead
+    of stalling behind the patch — `refresh`/`rebind` are the only swap
+    points, and the swap is a single atomic reference assignment."""
 
     def __init__(self, index, *, max_batch: int = 64):
         if max_batch < 1:
@@ -65,76 +93,89 @@ class QuotientEngine:
         self.stats = dict(waves=0, hops=0, queries=0, point_lookups=0)
         self._dev_levels: Dict[int, tuple] = {}
         self._dev_labels: Dict[int, jnp.ndarray] = {}
+        self._view: _EpochView = None
         self.refresh()
 
     # ------------------------------------------------------------ snapshot
     def refresh(self, levels=None) -> None:
         """(Re-)upload level edge triples and block labels; with
         ``levels`` only those (a patch's touched set), else all.  The
-        caller swaps the host index first — queries issued before the
-        refresh read the previous snapshot's arrays."""
+        caller patches the host index first (copy-on-write: pinned
+        arrays are never scribbled on); this swap is the one atomic
+        point where new queries start seeing the new epoch."""
         idx = self.index
+        dev_levels = dict(self._dev_levels)
+        dev_labels = dict(self._dev_labels)
         lvls = range(1, idx.k + 1) if levels is None else sorted(levels)
         for j in lvls:
             L = idx.levels[j]
-            self._dev_levels[j] = (jnp.asarray(L.src),
-                                   jnp.asarray(L.elabel),
-                                   jnp.asarray(L.dst))
+            dev_levels[j] = (jnp.asarray(L.src),
+                             jnp.asarray(L.elabel),
+                             jnp.asarray(L.dst))
         labs = range(idx.k + 1) if levels is None else sorted(
             set(levels) | {j - 1 for j in levels})
         for j in labs:
             if 0 <= j <= idx.k:
-                self._dev_labels[j] = jnp.asarray(idx.labels[j])
+                dev_labels[j] = jnp.asarray(idx.labels[j])
+        self._dev_levels = dev_levels
+        self._dev_labels = dev_labels
+        # the atomic swap: a single reference assignment under the GIL
+        self._view = _EpochView(
+            int(idx.epoch), idx.k, tuple(int(c) for c in idx.counts),
+            list(idx.labels), list(idx.runs), dev_levels, dev_labels)
         self.epoch = int(idx.epoch)
 
     def rebind(self, index) -> None:
         """Point the engine at a replacement index (rematerialization):
         drop every cached device array and re-upload from scratch."""
         self.index = index
-        self._dev_levels.clear()
-        self._dev_labels.clear()
+        self._dev_levels = {}
+        self._dev_labels = {}
         self.refresh()
 
     # -------------------------------------------------------------- serve
     def query(self, queries: List) -> List:
         """Evaluate a batch of queries; answers keep input order.  Path
         queries return ascending node-id arrays, `PointLookup` returns
-        a `PointAnswer`."""
+        a `PointAnswer`.  The whole batch is answered against the epoch
+        current at admission (pinned once, here)."""
+        view = self._view
         answers: List = [None] * len(queries)
         buckets: Dict[tuple, list] = {}
         for i, q in enumerate(queries):
             if isinstance(q, PointLookup):
-                answers[i] = point_lookup(self.index, q.node, q.level)
+                answers[i] = point_lookup(view, q.node, q.level)
                 self.stats["point_lookups"] += 1
                 continue
-            labels, src_l, tgt_l, level = normalize_query(q, self.index.k)
+            labels, src_l, tgt_l, level = normalize_query(q, view.k)
             buckets.setdefault((level, len(labels)), []).append(
                 (i, labels, src_l, tgt_l))
         for (j, m), items in sorted(buckets.items()):
             for w0 in range(0, len(items), self.max_batch):
-                self._run_wave(j, m, items[w0:w0 + self.max_batch],
+                self._run_wave(view, j, m, items[w0:w0 + self.max_batch],
                                answers)
         return answers
 
-    def _run_wave(self, j: int, m: int, wave: list, answers: list) -> None:
+    def _run_wave(self, view: _EpochView, j: int, m: int, wave: list,
+                  answers: list) -> None:
         B = self.max_batch
         with obs.span("quotient.query_wave", level=j, hops=m,
-                      batch=len(wave), epoch=self.epoch):
+                      batch=len(wave), epoch=view.epoch):
             want = np.full(B, WANT_NONE, dtype=np.int32)
             for s, (_, _, _, tgt_l) in enumerate(wave):
                 want[s] = WANT_ALL if tgt_l is None else tgt_l
-            mask = _init_mask(self._dev_labels[j - m], jnp.asarray(want))
+            mask = _init_mask(view.dev_labels[j - m], jnp.asarray(want))
             for t in range(m - 1, -1, -1):
                 lev = j - t
-                src, el, dst = self._dev_levels[lev]
+                src, el, dst = view.dev_levels[lev]
                 lab_t = np.full(B, WANT_NONE, dtype=np.int32)
                 for s, (_, labels, _, _) in enumerate(wave):
                     lab_t[s] = labels[t]
                 mask = _hop(mask, src, el, dst, jnp.asarray(lab_t),
-                            n_src=self.index.counts[lev])
+                            n_src=view.counts[lev])
                 self.stats["hops"] += 1
             host = np.asarray(mask)  # the wave's one device->host sync
             self.stats["waves"] += 1
             for s, (i, _, src_l, _) in enumerate(wave):
-                answers[i] = expand_blocks(self.index, j, host[s], src_l)
+                answers[i] = expand_blocks(view, j, host[s], src_l)
                 self.stats["queries"] += 1

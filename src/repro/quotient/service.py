@@ -38,6 +38,7 @@ patch.
 from __future__ import annotations
 
 import os
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -46,7 +47,7 @@ from repro.exmem.runs import IOStats
 from repro.obs import tracer as obs
 
 from .engine import QuotientEngine
-from .materialize import materialize_quotient
+from .materialize import ExtentRuns, materialize_quotient
 
 _INT32 = np.int32
 
@@ -54,7 +55,12 @@ _INT32 = np.int32
 class QuotientService:
     """Owns a `BisimMaintainer` and a served `QuotientIndex`; every
     mutator wraps the maintainer's and absorbs the result into the
-    artifact before returning."""
+    artifact before returning.
+
+    Admission: `query` takes no lock — it reads the engine's pinned
+    epoch view, so queries admitted during an in-flight patch answer
+    against the pre-patch epoch instead of queueing behind it.
+    Mutators (and `absorb`) serialize on one host lock."""
 
     def __init__(self, maintainer, workdir: str, *,
                  max_batch: int = 64, budget_rows: int = 1 << 16,
@@ -65,6 +71,7 @@ class QuotientService:
         self.aio = aio
         self.io = IOStats()
         self.epoch = 0
+        self._mut = threading.Lock()
         self.index = self._materialize()
         self.engine = QuotientEngine(self.index, max_batch=max_batch)
         self.patches = 0          # incremental absorptions
@@ -72,37 +79,53 @@ class QuotientService:
 
     # ------------------------------------------------------------- queries
     def query(self, queries: List) -> List:
+        # lock-free: the engine pins its current epoch view once per call
         return self.engine.query(queries)
 
     # ------------------------------------------------------------ mutators
     def add_edges(self, src, elabel, dst):
-        rep = self.m.add_edges(src, elabel, dst)
-        self._absorb()
+        with self._mut:
+            rep = self.m.add_edges(src, elabel, dst)
+            self._absorb()
         return rep
 
     def delete_edges(self, src, elabel, dst):
-        rep = self.m.delete_edges(src, elabel, dst)
-        self._absorb()
+        with self._mut:
+            rep = self.m.delete_edges(src, elabel, dst)
+            self._absorb()
         return rep
 
     def delete_node(self, nid: int):
-        rep = self.m.delete_node(nid)
-        self._absorb()
+        with self._mut:
+            rep = self.m.delete_node(nid)
+            self._absorb()
         return rep
 
     def add_nodes(self, labels) -> list:
-        ids = self.m.add_nodes(labels)
-        self._absorb()
+        with self._mut:
+            ids = self.m.add_nodes(labels)
+            self._absorb()
         return ids
 
     def compact(self) -> np.ndarray:
-        remap = self.m.compact()
-        self._absorb()
+        with self._mut:
+            remap = self.m.compact()
+            self._absorb()
         return remap
 
     def change_k(self, new_k: int) -> None:
-        self.m.change_k(new_k)
-        self._absorb()
+        with self._mut:
+            self.m.change_k(new_k)
+            self._absorb()
+
+    def absorb(self) -> None:
+        """Advance the served artifact to the maintainer's current state
+        — for callers that applied updates directly on the maintainer
+        (the streaming service's batch loop) rather than through the
+        mutators above.  Uses `maintainer.last_changed` exactly like the
+        wrapped mutators do."""
+        with self._mut:
+            self._absorb()
 
     # ----------------------------------------------------------- absorption
     def _graph_handle(self):
@@ -205,12 +228,16 @@ class QuotientService:
                                rows["pt"].astype(_INT32), stats=self.io)
             idx.refresh_level(j, self.io)
 
-        # extents + block labels for every level with pid changes
+        # extents + block labels for every level with pid changes.
+        # Copy-on-write throughout: a pinned engine view may still be
+        # answering from the old runs/labels objects, so they are
+        # replaced, never mutated in place.
         for j in range(k + 1):
             ch = changed[j]
             if idx.runs[j].n_blocks != counts_new[j]:
-                idx.runs[j].n_blocks = counts_new[j]
-                idx.runs[j]._order = None  # drop the per-pid index
+                r = idx.runs[j]
+                idx.runs[j] = ExtentRuns(r.start, r.pid, r.num_nodes,
+                                         counts_new[j])
             if ch.size == 0:
                 continue
             pids = np.asarray(backend.pid_at(j, ch), dtype=np.int64)
@@ -221,8 +248,10 @@ class QuotientService:
             if counts_new[j] > lab_old.shape[0]:
                 grown = np.full(counts_new[j], -1, _INT32)
                 grown[:lab_old.shape[0]] = lab_old
-                idx.labels[j] = grown
-            idx.labels[j][pids] = backend.node_labels_of(ch)
+            else:
+                grown = lab_old.copy()
+            grown[pids] = backend.node_labels_of(ch)
+            idx.labels[j] = grown
 
         idx.counts = counts_new
         idx.num_nodes = n_new

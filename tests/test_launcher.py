@@ -23,7 +23,7 @@ def _subparsers(ap: argparse.ArgumentParser) -> dict:
 def test_every_subcommand_helps_with_shared_flags():
     subs = _subparsers(build_parser())
     assert {"add-edges", "delete-node", "compact", "recover",
-            "materialize", "query"} <= set(subs)
+            "materialize", "query", "serve-updates"} <= set(subs)
     for name, sp in subs.items():
         help_text = sp.format_help()
         for flag in SHARED_FLAGS:
@@ -50,6 +50,21 @@ def test_quotient_subcommands_parse():
     assert args.cmd == "query"
     assert args.path == ["0:1:2", "3"] and args.point == [7]
     assert args.update == 4 and args.batch == 16
+
+
+def test_serve_updates_parses():
+    ap = build_parser()
+    args = ap.parse_args(["serve-updates", "--ops", "120", "--rate", "50",
+                          "--batch-ops", "16", "--batch-deadline-ms", "25",
+                          "--snapshot-every", "4", "--staleness-batches",
+                          "2", "--compact-threshold", "0.1", "--async-wal",
+                          "--kill-at-op", "60"])
+    assert args.cmd == "serve-updates"
+    assert args.ops == 120 and args.rate == 50.0
+    assert args.batch_ops == 16 and args.batch_deadline_ms == 25.0
+    assert args.snapshot_every == 4 and args.staleness_batches == 2
+    assert args.compact_threshold == 0.1 and args.async_wal
+    assert args.kill_at_op == 60 and not args.no_quotient
 
 
 def test_existing_subcommands_still_parse():

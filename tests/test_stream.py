@@ -1,0 +1,327 @@
+"""Streaming maintenance service (ISSUE 10): sustained ingest over the
+WAL, plus the durability and query-admission regressions this PR fixes.
+
+Coverage:
+
+  * batch-boundary invariance — the same op stream applied through
+    services with different ``batch_ops`` yields a bit-identical pid
+    history (and agrees with the from-scratch `build_bisim` oracle),
+    because `BisimMaintainer.apply_ops` applies strictly in submission
+    order;
+  * staleness bound — the attached quotient index is never more than
+    ``staleness_batches`` applied batches behind;
+  * epoch-pinned admission (satellite 1) — a query admitted before a
+    patch keeps reading its complete pre-patch `_EpochView`; the patch
+    is copy-on-write, so pinned labels/runs/counts never change under a
+    reader, and a concurrent reader thread hammering `query` during
+    ingest sees no exceptions and a monotone epoch sequence;
+  * WAL truncation race (satellite 2) — a crash at any fault point
+    inside `WriteAheadLog.truncate` leaves a recoverable store whose
+    lsn numbering stays monotone (the durable floor is written first);
+  * close-with-in-flight-commit (satellite 3) — `OocBackend.close`
+    drains async group-commit rounds before the executor shuts down: no
+    live aio threads remain, every commit line is well-formed, and the
+    committed set covers every appended record;
+  * async/sync WAL equivalence — the same stream with
+    ``async_wal`` on and off commits identical records and lands on the
+    bit-identical pid history;
+  * crash mid-ingest (satellite 4) — seeded fault-point kills anywhere
+    in the streaming schedule (batch apply, snapshot, truncation);
+    recovery + resubmission of the lost suffix reproduces the
+    never-killed run's pid history bit-identically, with oracle
+    agreement (the PR 5 differential oracle + PR 6 crash protocol).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import test_update_fuzz as fuzz
+from repro.core import (BisimMaintainer, FaultPlan, InjectedCrash,
+                        install_fault_plan)
+from repro.exmem import (OocBackend, StreamConfig,
+                         StreamingMaintenanceService, WriteAheadLog,
+                         replay_open_loop, synthesize_ops)
+from repro.exmem.aio import live_aio_threads
+from repro.quotient import LabelPath, PointLookup, QuotientService
+
+SEED = 909
+N_OPS = 16
+
+
+def _quiet_cfg(**kw):
+    """Deterministic scheduling: no deadline races, no state-timed
+    compaction (a service-scheduled compact lands at a stream position
+    that depends on batch size / crash point, which would make the
+    bit-identity comparisons vacuously flaky)."""
+    base = dict(batch_ops=4, batch_deadline_s=10.0, snapshot_every=2,
+                staleness_batches=1, compact_threshold=0.0)
+    base.update(kw)
+    return StreamConfig(**base)
+
+
+def _svc(workdir, cfg, *, io_threads=0, wal_group=1, quotient=False,
+         k=2, mode="sorted", wal_async=False):
+    backend = OocBackend(fuzz.GENERATORS["random"](), chunk_edges=32,
+                         chunk_nodes=24, spill_threshold=16,
+                         workdir=str(workdir), io_threads=io_threads,
+                         wal=True, wal_group=wal_group,
+                         wal_async=wal_async)
+    m = BisimMaintainer(backend, k, mode=mode, wal=True)
+    q = (QuotientService(m, str(workdir), aio=backend.aio)
+         if quotient else None)
+    return StreamingMaintenanceService(m, config=cfg, quotient=q)
+
+
+def _pids_of(m):
+    return [np.asarray(m.pids[j]).copy() for j in range(m.k + 1)]
+
+
+# ---------------------------------------------- batch-boundary invariance
+def test_batch_boundaries_do_not_change_pid_history(tmp_path):
+    ops = synthesize_ops(N_OPS, num_nodes=40, seed=SEED)
+    histories = []
+    for batch_ops in (1, 3, 16):
+        svc = _svc(tmp_path / f"b{batch_ops}",
+                   _quiet_cfg(batch_ops=batch_ops))
+        replay_open_loop(svc, ops)
+        svc.close()
+        histories.append((_pids_of(svc.m), list(svc.m.next_pid)))
+        fuzz._oracle_check(svc.m, ("stream-batch", batch_ops))
+        svc.m.backend.close()
+    ref_pids, ref_next = histories[0]
+    for pids, next_pid in histories[1:]:
+        assert next_pid == ref_next
+        for j, (a, b) in enumerate(zip(pids, ref_pids)):
+            np.testing.assert_array_equal(a, b, err_msg=f"level {j}")
+
+
+# ------------------------------------------------------- staleness bound
+def test_staleness_stays_within_bound(tmp_path):
+    cfg = _quiet_cfg(batch_ops=2, staleness_batches=2)
+    svc = _svc(tmp_path, cfg, quotient=True)
+    replay_open_loop(svc, synthesize_ops(N_OPS, num_nodes=40, seed=SEED))
+    svc.close()
+    st = svc.stats()
+    assert st["max_staleness"] <= st["staleness_bound"] == 2
+    assert st["absorbed"] >= 1 and st["epoch"] >= 1
+    assert st["pending"] == 0, "drain left ops behind"
+    svc.m.backend.close()
+
+
+# -------------------------------------- satellite 1: epoch-pinned reads
+def test_patch_is_copy_on_write_for_pinned_views(tmp_path):
+    svc = _svc(tmp_path, _quiet_cfg(), quotient=True)
+    ops = synthesize_ops(N_OPS, num_nodes=40, seed=SEED)
+    replay_open_loop(svc, ops[:8])
+    svc.drain()
+    eng = svc.q.engine
+    view0 = eng._view
+    frozen = ([a.copy() for a in view0.labels], list(view0.counts),
+              [r.n_blocks for r in view0.runs], view0.epoch)
+    replay_open_loop(svc, ops[8:])
+    svc.close()
+    assert eng._view is not view0, "absorb published no new view"
+    assert eng._view.epoch > view0.epoch
+    labels0, counts0, nblocks0, epoch0 = frozen
+    assert view0.epoch == epoch0
+    assert list(view0.counts) == counts0
+    assert [r.n_blocks for r in view0.runs] == nblocks0
+    for j, a in enumerate(view0.labels):
+        np.testing.assert_array_equal(
+            a, labels0[j], err_msg=f"pinned labels[{j}] were scribbled on")
+    svc.m.backend.close()
+
+
+def test_queries_admitted_during_patches_never_tear(tmp_path):
+    svc = _svc(tmp_path, _quiet_cfg(batch_ops=2), quotient=True)
+    queries = [LabelPath((0,), level=1), LabelPath((1,), level=1),
+               LabelPath((0, 1), level=2), PointLookup(0, 1),
+               PointLookup(0, 2)]
+    stop = threading.Event()
+    errors, epochs = [], []
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                epochs.append(svc.q.engine._view.epoch)
+                answers = svc.q.query(queries)
+                assert len(answers) == len(queries)
+        except BaseException as e:       # noqa: BLE001 — reported below
+            errors.append(e)
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        replay_open_loop(
+            svc, synthesize_ops(2 * N_OPS, num_nodes=40, seed=SEED))
+        svc.drain()
+    finally:
+        stop.set()
+        t.join()
+    assert not errors, errors
+    assert epochs == sorted(epochs), "epoch went backwards under a reader"
+    assert svc.q.epoch >= 1
+    svc.close()
+    svc.m.backend.close()
+
+
+# ------------------------------------ satellite 2: truncation lsn floor
+def test_truncate_kill_points_keep_lsn_monotone(tmp_path):
+    """Kill at every fault point inside `WriteAheadLog.truncate` (fired
+    by the snapshot's WAL truncation): the store must recover to the
+    reference state and the next append must get a fresh lsn — never
+    reuse one a client already holds as an ack."""
+    ops = fuzz._op_schedule(SEED)
+
+    ref = fuzz._wal_maintainer(str(tmp_path / "ref"), "random", "sorted")
+    fuzz._apply_indexed(ref, ops, 0, fuzz._SNAPS[0], SEED)
+    ref_pids, last_lsn = _pids_of(ref), ref.backend._wal.last_lsn
+    ref.backend.close()
+    assert last_lsn > 0
+
+    obs_m = fuzz._wal_maintainer(str(tmp_path / "obs"), "random", "sorted")
+    # _apply_indexed snapshots after op _SNAPS[0]; observe that snapshot
+    with install_fault_plan(FaultPlan()) as plan:
+        fuzz._apply_indexed(obs_m, ops, 0, fuzz._SNAPS[0], SEED)
+    trunc_points = [idx for idx, kind, _ in plan.log
+                    if kind == "wal_truncate"]
+    obs_m.backend.close()
+    assert len(trunc_points) >= 3, "truncate lost its fault points"
+
+    for n in trunc_points:
+        wd = str(tmp_path / f"kill_{n:04d}")
+        m = fuzz._wal_maintainer(wd, "random", "sorted")
+        with install_fault_plan(FaultPlan(crash_at=n)):
+            with pytest.raises(InjectedCrash):
+                fuzz._apply_indexed(m, ops, 0, fuzz._SNAPS[0], SEED)
+        m.backend.aio.close()
+
+        be2, state = OocBackend.restore(wd, io_threads=0)
+        m2 = BisimMaintainer.restore(be2, state)
+        for j in range(m2.k + 1):
+            np.testing.assert_array_equal(
+                np.asarray(m2.pids[j]), ref_pids[j],
+                err_msg=f"truncate kill point {n}, level {j}")
+        m2.add_edges([0], [0], [1])
+        assert be2._wal.last_lsn > last_lsn, \
+            f"kill point {n} reused an acknowledged lsn"
+        be2.close()
+
+
+def test_lsn_floor_survives_reopen_after_full_truncation(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    for i in range(3):
+        wal.append("add_nodes", dict(labels=np.asarray([i], np.int32)))
+    wal.truncate(wal.last_lsn)
+    wal.close()
+    assert not list(WriteAheadLog(str(tmp_path)).replay())
+    # no start_lsn hint: the durable floor alone must keep lsns monotone
+    reopened = WriteAheadLog(str(tmp_path))
+    assert reopened.append(
+        "add_nodes", dict(labels=np.asarray([9], np.int32))) == 4
+    reopened.close()
+
+
+# -------------------------------- satellite 3: close drains async rounds
+def test_backend_close_drains_inflight_group_commit(tmp_path):
+    svc = _svc(tmp_path, _quiet_cfg(snapshot_every=0, async_wal=True),
+               io_threads=2, wal_group=4, wal_async=True)
+    replay_open_loop(svc, synthesize_ops(10, num_nodes=40, seed=SEED))
+    svc.drain()
+    wal_root, last = svc.m.backend._wal.root, svc.m.backend._wal.last_lsn
+    assert last == 10
+    # close with a commit round potentially still on the executor: the
+    # WAL must drain before the executor shuts down
+    svc.m.backend.close()
+    assert live_aio_threads() == []
+
+    with open(os.path.join(wal_root, "commits.log")) as f:
+        lines = [ln.split() for ln in f.read().splitlines() if ln]
+    assert all(len(t) == 3 and all(x.isdigit() for x in t)
+               for t in lines), "torn or malformed commit line published"
+    recs = list(WriteAheadLog(wal_root).replay())
+    assert [lsn for lsn, _, _ in recs] == list(range(1, last + 1)), \
+        "close lost acknowledged records"
+
+
+# --------------------------------------------- async == sync WAL content
+def test_async_and_sync_wal_commit_identical_records(tmp_path):
+    ops = synthesize_ops(N_OPS, num_nodes=40, seed=SEED)
+    runs = {}
+    for label, wal_async in (("sync", False), ("async", True)):
+        svc = _svc(tmp_path / label,
+                   _quiet_cfg(snapshot_every=0, async_wal=wal_async),
+                   io_threads=2, wal_group=3, wal_async=wal_async)
+        replay_open_loop(svc, ops)
+        svc.close(snapshot=False)
+        root = svc.m.backend._wal.root
+        pids = _pids_of(svc.m)
+        svc.m.backend.close()
+        runs[label] = (pids, list(WriteAheadLog(root).replay()))
+    (pids_s, recs_s), (pids_a, recs_a) = runs["sync"], runs["async"]
+    for a, b in zip(pids_s, pids_a):
+        np.testing.assert_array_equal(a, b)
+    assert [(l, op) for l, op, _ in recs_s] == \
+        [(l, op) for l, op, _ in recs_a]
+    for (_, _, arr_s), (_, _, arr_a) in zip(recs_s, recs_a):
+        assert sorted(arr_s) == sorted(arr_a)
+        for key in arr_s:
+            np.testing.assert_array_equal(arr_s[key], arr_a[key])
+
+
+# ------------------------------------- satellite 4: crash mid-ingest
+def test_stream_crash_recovery_bit_identical(tmp_path):
+    """Kill the streaming service at seeded fault points spread over the
+    whole schedule (WAL appends, batch applies, snapshots, truncations);
+    `StreamingMaintenanceService.recover` + resubmission of the lost
+    suffix must land on the never-killed run's exact pid history."""
+    cfg = _quiet_cfg()
+    ops = synthesize_ops(N_OPS, num_nodes=40, seed=SEED)
+
+    ref = _svc(tmp_path / "ref", cfg)
+    ref_lsns = replay_open_loop(ref, ops)
+    ref.close()
+    ref_pids, ref_next = _pids_of(ref.m), list(ref.m.next_pid)
+    ref.m.backend.close()
+    assert ref_lsns == sorted(ref_lsns), "submit acks must be monotone"
+
+    obs_svc = _svc(tmp_path / "obs", cfg)
+    with install_fault_plan(FaultPlan()) as plan:
+        replay_open_loop(obs_svc, ops)
+        obs_svc.close()
+    total = plan.points_seen
+    obs_svc.m.backend.close()
+    assert total > 10, "fault-injection coverage collapsed"
+
+    kill_rng = np.random.default_rng(SEED)
+    points = sorted({1, total} | {int(x) for x in
+                                  kill_rng.integers(2, total, 4)})
+    for n in points:
+        wd = str(tmp_path / f"kill_{n:04d}")
+        svc = _svc(wd, cfg)
+        svc.snapshot()              # the pre-stream baseline (restore base)
+        with install_fault_plan(FaultPlan(crash_at=n)):
+            with pytest.raises(InjectedCrash):
+                replay_open_loop(svc, ops)
+                svc.close()
+        svc.m.backend.aio.close()   # the dead process: no clean close
+
+        rec = StreamingMaintenanceService.recover(wd, io_threads=0,
+                                                  config=cfg)
+        committed = rec.m.backend._wal.committed_lsn
+        # the reference lsn sequence doubles as the submit-ack ledger:
+        # identical cfg + ops => identical appends, so the count of ref
+        # lsns at-or-below the recovered commit horizon is exactly how
+        # many submitted ops survived the crash
+        done = sum(1 for lsn in ref_lsns if lsn <= committed)
+        replay_open_loop(rec, ops[done:])
+        rec.close()
+        assert list(rec.m.next_pid) == ref_next, (n,)
+        for j in range(rec.m.k + 1):
+            np.testing.assert_array_equal(
+                np.asarray(rec.m.pids[j]), ref_pids[j],
+                err_msg=f"stream kill point {n}, level {j}")
+        fuzz._oracle_check(rec.m, ("stream-recovery", n))
+        rec.m.backend.close()
